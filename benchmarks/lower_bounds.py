@@ -1,0 +1,46 @@
+"""Paper §6: lower-bound machinery outputs — solver-derived vs closed-form
+bounds for LU / MMM across (N, P, M), plus the COnfLUX-to-bound ratio."""
+
+from __future__ import annotations
+
+import math
+import time
+
+from repro.core.lu.cost_models import conflux_model
+from repro.core.xpart import max_computational_intensity
+from repro.core.xpart.lu_bound import (
+    lu_parallel_lower_bound,
+    lu_sequential_lower_bound,
+    lu_statements,
+)
+
+
+def main(csv: bool = True):
+    rows = []
+    if csv:
+        print("name,us_per_call,derived")
+    for N in (4096.0, 16384.0):
+        for M in (2**14, 2**20):
+            t0 = time.perf_counter()
+            s1, s2 = lu_statements(N, M)
+            r1 = max_computational_intensity(s1, M)
+            r2 = max_computational_intensity(s2, M)
+            solver = r2.bound + s1.domain_size
+            closed = lu_sequential_lower_bound(N, M)
+            dt = (time.perf_counter() - t0) * 1e6
+            rows.append((N, M, r1.rho, r2.rho, solver / closed))
+            if csv:
+                print(f"lu_bound_N{int(N)}_M{int(M)},{dt:.0f},"
+                      f"rhoS1={r1.rho:.3f};rhoS2={r2.rho:.3f};solver/closed={solver/closed:.4f}")
+    # algorithm-to-bound gap (the paper's 'factor 1/3 over the bound')
+    for P in (64, 1024):
+        N, c = 16384, 8
+        M = c * N * N / P
+        gap = conflux_model(N, P, M) / lu_parallel_lower_bound(N, P, M)
+        if csv:
+            print(f"conflux_over_bound_P{P},0,{gap:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Executed distributed LU at container scale: correctness + wall time +
+instrumented comm volume on 8 host devices (subprocess because the device
+count must be pinned before jax initializes)."""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+_WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, time
+sys.path.insert(0, %r)
+import numpy as np, jax.numpy as jnp
+from repro.core.lu.conflux import conflux_lu
+from repro.core.lu.baseline2d import scalapack2d_lu
+from repro.core.lu.grid import GridConfig
+from repro.core.lu.sequential import reconstruct
+
+rng = np.random.default_rng(0)
+print("impl,N,grid,us_per_call,err,comm_per_proc")
+for N in (128, 256):
+    A = rng.standard_normal((N, N)).astype(np.float32)
+    for name, fn in [
+        ("COnfLUX", lambda A: conflux_lu(A, grid=GridConfig(Px=2, Py=2, c=2, v=16, N=A.shape[0]))),
+        ("ScaLAPACK2D", lambda A: scalapack2d_lu(A, P_target=8, v=16)),
+    ]:
+        res = fn(A)  # warm compile
+        t0 = time.perf_counter(); res = fn(A); dt = time.perf_counter() - t0
+        rec = np.asarray(reconstruct(jnp.asarray(res.F), jnp.asarray(res.rows)))
+        err = float(np.abs(rec - A).max() / np.abs(A).max())
+        print(f"{name},{N},{res.grid},{dt*1e6:.0f},{err:.2e},{res.comm['total']:.0f}")
+"""
+
+
+def main(csv: bool = True):
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run(
+        [sys.executable, "-c", _WORKER % src], capture_output=True, text=True, timeout=1200,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-2000:])
+    print(proc.stdout.strip())
+    return proc.stdout
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""EXPERIMENTS.md §Roofline: render the dry-run results JSON as the per-cell
+three-term roofline table (single-pod mesh, per the assignment)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.json")
+
+
+def load(path=RESULTS):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows(path=RESULTS, mesh="16x16"):
+    out = []
+    for r in load(path):
+        if not r.get("ok") or r.get("mesh") != mesh:
+            continue
+        rl = r["roofline"]
+        out.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "t_compute_s": rl["t_compute_s"], "t_memory_s": rl["t_memory_s"],
+            "t_collective_s": rl["t_collective_s"], "bottleneck": rl["bottleneck"],
+            "model_flops": rl["model_flops"], "hlo_flops": rl["hlo_flops"],
+            "flops_ratio": rl["flops_ratio"],
+            "roofline_fraction": rl["roofline_fraction"],
+            "temp_gb": (r["memory"]["temp_bytes"] or 0) / 1e9,
+        })
+    out.sort(key=lambda r: (r["arch"], r["shape"]))
+    return out
+
+
+def main(csv: bool = True):
+    rs = rows()
+    if csv:
+        print("arch,shape,t_compute_s,t_memory_s,t_collective_s,bottleneck,"
+              "flops_ratio,roofline_fraction,temp_gb")
+        for r in rs:
+            print(f"{r['arch']},{r['shape']},{r['t_compute_s']:.3e},"
+                  f"{r['t_memory_s']:.3e},{r['t_collective_s']:.3e},{r['bottleneck']},"
+                  f"{r['flops_ratio']:.3f},{r['roofline_fraction']:.4f},{r['temp_gb']:.1f}")
+        if not rs:
+            print("# (run PYTHONPATH=src python -m repro.launch.dryrun first)")
+    return rs
+
+
+if __name__ == "__main__":
+    main()

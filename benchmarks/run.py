@@ -1,0 +1,51 @@
+"""Benchmark harness entry: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-measured]
+
+Prints ``name,us_per_call,derived``-style CSV blocks per section.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _section(title):
+    print(f"\n### {title}")
+
+
+def main() -> None:
+    skip_measured = "--skip-measured" in sys.argv
+
+    _section("Table 2: communication volume models vs paper (GB)")
+    t0 = time.perf_counter()
+    from benchmarks import table2
+
+    table2.main()
+    print(f"# table2 done in {time.perf_counter()-t0:.1f}s")
+
+    _section("Fig 6a/6b/7: scaling + exascale extrapolation")
+    from benchmarks import scaling
+
+    scaling.main()
+
+    _section("Section 6: I/O lower bounds (solver vs closed form)")
+    from benchmarks import lower_bounds
+
+    lower_bounds.main()
+
+    if not skip_measured:
+        _section("Executed distributed LU (8 host devices)")
+        from benchmarks import lu_measured
+
+        lu_measured.main()
+
+    _section("Roofline table (from dry-run results, single pod)")
+    from benchmarks import roofline_table
+
+    roofline_table.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Paper Fig. 6a/6b/7: communication-volume scaling.
+
+6a: volume/node vs P at fixed N=16384 (strong scaling).
+6b: volume/node under weak scaling N = 3200 * P^(1/3).
+7:  COnfLUX reduction vs the second-best implementation, extrapolated to
+    exascale ranks (P up to 262144)."""
+
+from __future__ import annotations
+
+import math
+
+from repro.core.lu.conflux import lu_comm_volume
+from repro.core.lu.cost_models import candmc_model, conflux_model, scalapack2d_model
+from repro.core.lu.grid import GridConfig
+
+
+def _grids(N, P):
+    c = max(2 ** int(math.log2(max(round(P ** (1 / 3)), 1))), 1)
+    p2 = max(P // c, 1)
+    px = 2 ** int(math.log2(max(math.isqrt(p2), 1)))
+    py = max(p2 // px, 1)
+    v = max(min(64, N // max(px, py, 1)), 8)
+    M = c * N * N / P
+    return GridConfig(Px=px, Py=py, c=c, v=v, N=N), M
+
+
+def fig6a(N=16384, Ps=(4, 8, 16, 32, 64, 128, 256, 512, 1024)):
+    rows = []
+    for P in Ps:
+        g, M = _grids(N, P)
+        rows.append({
+            "P": P,
+            "conflux_instrumented": lu_comm_volume(N, g)["total"],
+            "conflux_model": conflux_model(N, P, M),
+            "scalapack2d_model": scalapack2d_model(N, P),
+            "candmc_model": candmc_model(N, P, M),
+        })
+    return rows
+
+
+def fig6b(Ps=(8, 64, 512, 4096), base=3200):
+    rows = []
+    for P in Ps:
+        N = int(base * round(P ** (1 / 3)))
+        g, M = _grids(N, P)
+        rows.append({
+            "P": P, "N": N,
+            "conflux_model": conflux_model(N, P, M),
+            "scalapack2d_model": scalapack2d_model(N, P),
+        })
+    return rows
+
+
+def fig7(N=16384, Ps=(1024, 4096, 16384, 65536, 262144)):
+    """Leading-order models only, as the paper plots them ('Only the leading
+    factors of the models are shown')."""
+    rows = []
+    for P in Ps:
+        g, M = _grids(N, P)
+        ours = N**3 / (P * math.sqrt(M))
+        lead_2d = N**2 / math.sqrt(P)
+        lead_candmc = 5 * ours
+        second_best = min(lead_2d, lead_candmc)
+        rows.append({
+            "P": P,
+            "reduction_vs_second_best": second_best / ours,
+            "candmc_beats_2d": lead_candmc < lead_2d,
+        })
+    return rows
+
+
+def main(csv: bool = True):
+    out = {"fig6a": fig6a(), "fig6b": fig6b(), "fig7": fig7()}
+    if csv:
+        print("fig,P,N,conflux,conflux_instr,scalapack2d,candmc,reduction")
+        for r in out["fig6a"]:
+            print(f"6a,{r['P']},16384,{r['conflux_model']:.3e},"
+                  f"{r['conflux_instrumented']:.3e},{r['scalapack2d_model']:.3e},"
+                  f"{r['candmc_model']:.3e},")
+        for r in out["fig6b"]:
+            print(f"6b,{r['P']},{r['N']},{r['conflux_model']:.3e},,"
+                  f"{r['scalapack2d_model']:.3e},,")
+        for r in out["fig7"]:
+            print(f"7,{r['P']},16384,,,,,{r['reduction_vs_second_best']:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

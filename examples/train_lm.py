@@ -1,0 +1,57 @@
+"""End-to-end training driver: a reduced qwen3-style LM on the synthetic
+copy task for a few hundred steps, with checkpointing, fault-tolerant resume,
+and a generation sanity check at the end.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import logging
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config, reduced
+from repro.data.pipeline import DataConfig, synthetic_batch
+from repro.models.model_zoo import build_model
+from repro.runtime.loop import RunConfig, run_training
+from repro.serving.engine import SamplerConfig, ServeEngine
+from repro.training.optimizer import OptConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--groups", type=int, default=2)
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+
+    cfg = reduced(get_config(args.arch), groups=args.groups)
+    model = build_model(cfg)
+    print(f"arch={cfg.name} layers={cfg.n_layers} d={cfg.d_model} "
+          f"params~{cfg.n_params/1e6:.1f}M")
+
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=16, mode="copy")
+    with tempfile.TemporaryDirectory() as ckdir:
+        out = run_training(
+            model, data_cfg, OptConfig(lr=5e-3, warmup_steps=20),
+            RunConfig(total_steps=args.steps, ckpt_every=50, log_every=50),
+            Checkpointer(ckdir),
+        )
+        losses = [m["loss"] for m in out["metrics"]]
+        print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps "
+              f"(restarts={out['restarts']})")
+
+        engine = ServeEngine(model, out["final_state"].params, max_len=32, batch_size=2,
+                             sampler=SamplerConfig(max_new_tokens=8))
+        prompt = np.asarray(synthetic_batch(data_cfg, 999)["tokens"][:2, :18])
+        outs = engine.generate(prompt.tolist())
+        hits = sum(int(outs[i][j] == prompt[i][j + 2]) for i in range(2) for j in range(6))
+        print(f"copy-task generation: {hits}/12 tokens echoed correctly")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""repro — COnfLUX (near-I/O-optimal parallel LU) + a production JAX LM framework.
+
+Public API:
+    repro.core.xpart      — parallel I/O lower-bound machinery (X-partitioning)
+    repro.core.lu         — COnfLUX 2.5D LU, 2D baseline, cost models
+    repro.core.solve      — lu / lu_solve / det front-end
+    repro.analysis        — HLO collective counter + roofline
+    repro.models          — assigned LM architectures
+    repro.configs         — architecture & shape registries
+    repro.launch          — production mesh, dry-run, train/serve drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,6 @@
+"""Compiled-artifact analysis: HLO collective/FLOP accounting and rooflines."""
+
+from repro.analysis.hlo import analyze_hlo, HloReport
+from repro.analysis.roofline import roofline, RooflineResult, TPU_V5E
+
+__all__ = ["analyze_hlo", "HloReport", "roofline", "RooflineResult", "TPU_V5E"]

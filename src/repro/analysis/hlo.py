@@ -1,0 +1,495 @@
+"""Static analysis of optimized HLO text: collective bytes, dot FLOPs, bytes
+accessed — all *while-loop trip-count aware*.
+
+Why: XLA's `compiled.cost_analysis()` visits a `while` body exactly once, so
+for a model that scans over L layers it under-counts compute and collective
+traffic by ~L x.  We parse the HLO text instead: each `while` op names its
+condition/body computations, and the condition computation carries the trip
+bound as an integer constant feeding a LT/LE compare.  Costs inside a body
+computation are multiplied by its trip count (nested loops compose).
+
+The module text produced after SPMD partitioning is a *per-device* program:
+all byte/FLOP figures returned here are per device.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e3m4": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast",
+)
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Total bytes of an HLO type string (handles tuples)."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+
+
+@dataclass
+class _Op:
+    name: str
+    kind: str
+    out_type: str
+    line: str
+    operands: list[str] = field(default_factory=list)
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: dict[str, _Op] = field(default_factory=dict)
+    order: list[str] = field(default_factory=list)
+
+
+_COMP_HDR = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+# Lazy type match: tuple types may contain /*index=N*/ comments; the op kind
+# is the first bare `word(` after the type expression.
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$")
+_REF_RE = re.compile(r"%([\w.\-]+)")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_EXPL_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONST_INT_RE = re.compile(r"=\s*s(?:8|16|32|64)\[\]\s*constant\((\d+)\)")
+
+
+def _parse_computations(text: str) -> dict[str, _Computation]:
+    comps: dict[str, _Computation] = {}
+    cur: _Computation | None = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR.match(line)
+        if hdr and ("->" in line):
+            cur = _Computation(name=hdr.group(1))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, out_type, kind, rest = m.groups()
+            op = _Op(name=name, kind=kind, out_type=out_type.strip(), line=line)
+            # operands: %refs before the first '),' boundary of the call args
+            argstr = rest.split("),")[0]
+            op.operands = _REF_RE.findall(argstr)
+            cur.ops[name] = op
+            cur.order.append(name)
+    return comps
+
+
+def _group_size(line: str, default: int = 1) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _EXPL_GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+def _callees(op: _Op) -> list[tuple[str, str]]:
+    """(relation, computation_name) pairs referenced by an op."""
+    out = []
+    for key in ("body", "condition", "calls", "to_apply", "true_computation",
+                "false_computation"):
+        m = re.search(rf"{key}=%?([\w.\-]+)", op.line)
+        if m:
+            out.append((key, m.group(1)))
+    m = re.search(r"branch_computations=\{([^}]*)\}", op.line)
+    if m:
+        for name in _REF_RE.findall(m.group(1)):
+            out.append(("branch", name))
+    return out
+
+
+def _const_int_of(comp: _Computation, name: str) -> int | None:
+    op = comp.ops.get(name)
+    if op is None:
+        return None
+    m = _CONST_INT_RE.search(op.line)
+    return int(m.group(1)) if m else None
+
+
+def _trip_count(cond: _Computation, body: _Computation | None, default: int) -> int:
+    """Trip count = (limit - init) / stride.
+
+    limit: the integer constant compared against the induction variable in the
+    condition computation.  stride: XLA's loop-widening increments the
+    induction variable by >1; recovered from the body's ROOT-tuple update of
+    the same tuple slot (add by a constant).  init is assumed 0.
+    """
+    # 1) find the compare (possibly wrapped in a fusion) and its gte slot + limit
+    limit = None
+    slot = None
+    direction_le = False
+    for opn in reversed(cond.order):
+        op = cond.ops[opn]
+        if op.kind not in ("compare", "fusion"):
+            continue
+        if op.kind == "fusion" and "compare" not in op.line and not any(
+            "compare" in cond.ops[o].kind for o in op.operands if o in cond.ops
+        ):
+            # fusion wrapping a compare body: accept any ROOT fusion with
+            # (gte, constant) operands
+            pass
+        cands = op.operands
+        for o in cands:
+            if o in cond.ops and cond.ops[o].kind == "get-tuple-element":
+                mi = re.search(r"index=(\d+)", cond.ops[o].line)
+                if mi:
+                    slot = int(mi.group(1))
+            c = _const_int_of(cond, o)
+            if c is not None:
+                limit = c
+        if "direction=LE" in op.line:
+            direction_le = True
+        if limit is not None:
+            break
+    if limit is None:
+        # any integer constant in the condition at all
+        consts = [
+            _const_int_of(cond, o) for o in cond.order if _const_int_of(cond, o) is not None
+        ]
+        if not consts:
+            return default
+        limit = max(consts)
+    if direction_le:
+        limit += 1
+
+    # 2) stride from the body's ROOT tuple slot update
+    stride = 1
+    if body is not None and slot is not None:
+        root = None
+        for opn in reversed(body.order):
+            if body.ops[opn].kind == "tuple":
+                root = body.ops[opn]
+                break
+        if root is not None and slot < len(root.operands):
+            upd = root.operands[slot]
+            seen = set()
+            while upd in body.ops and upd not in seen:  # follow copies
+                seen.add(upd)
+                uop = body.ops[upd]
+                if uop.kind in ("copy", "bitcast"):
+                    upd = uop.operands[0] if uop.operands else upd
+                    continue
+                if uop.kind in ("add", "fusion"):
+                    for o in uop.operands:
+                        c = _const_int_of(body, o)
+                        if c is not None and c > 0:
+                            stride = c
+                break
+    return max(int(round(limit / max(stride, 1))), 1)
+
+
+@dataclass
+class CollectiveSite:
+    kind: str
+    computation: str
+    payload_bytes: float  # logical payload (output for AG, input for AR/RS)
+    wire_bytes: float  # per-participant bytes on the wire, per execution
+    group_size: int
+    multiplier: float  # executions (loop trips)
+    op_name: str = ""
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return self.wire_bytes * self.multiplier
+
+
+@dataclass
+class HloReport:
+    collective_wire_bytes: float  # per device, trip-aware
+    collective_by_kind: dict[str, float]
+    dot_flops: float  # per device, trip-aware
+    bytes_accessed: float  # per device, trip-aware (approximate)
+    sites: list[CollectiveSite]
+    multipliers: dict[str, float]
+    entry: str = ""
+
+
+def _entry_name(text: str, comps: dict[str, _Computation]) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    # fall back: computation not referenced by any other
+    referenced = set()
+    for c in comps.values():
+        for opn in c.order:
+            referenced.update(name for _, name in _callees(c.ops[opn]))
+    for name in comps:
+        if name not in referenced:
+            return name
+    return next(iter(comps))
+
+
+def _compute_multipliers(
+    comps: dict[str, _Computation], entry: str, default_trip: int
+) -> dict[str, float]:
+    """Execution multiplier per computation: sum over call sites of caller
+    multiplier x (trip count for while bodies, 1 otherwise)."""
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    # Topological-ish fixpoint (call graphs are DAGs; few dozen comps).
+    for _ in range(len(comps) + 2):
+        changed = False
+        new = defaultdict(float)
+        new[entry] = 1.0
+        for cname, comp in comps.items():
+            base = mult.get(cname, 0.0)
+            if base == 0.0:
+                continue
+            for opn in comp.order:
+                op = comp.ops[opn]
+                for rel, callee in _callees(op):
+                    if callee not in comps:
+                        continue
+                    if rel == "body":
+                        condm = re.search(r"condition=%?([\w.\-]+)", op.line)
+                        trips = _trip_count(
+                            comps[condm.group(1)], comps[callee], default_trip
+                        ) if (condm and condm.group(1) in comps) else default_trip
+                        new[callee] += base * trips
+                    elif rel == "condition":
+                        bodym = re.search(r"body=%?([\w.\-]+)", op.line)
+                        body_c = comps.get(bodym.group(1)) if bodym else None
+                        new[callee] += base * (_trip_count(comps[callee], body_c,
+                                                           default_trip) + 1)
+                    else:
+                        new[callee] += base
+        for k, v in new.items():
+            if abs(mult.get(k, 0.0) - v) > 1e-9:
+                changed = True
+        mult = new
+        if not changed:
+            break
+    return dict(mult)
+
+
+def _collective_wire_bytes(op: _Op) -> tuple[float, float, int]:
+    """(payload, per-participant wire bytes, group size) for a collective op."""
+    g = _group_size(op.line)
+    out_b = _shape_bytes(op.out_type)
+    if op.kind.startswith("all-gather"):
+        payload = out_b
+        wire = out_b * (g - 1) / max(g, 1)
+    elif op.kind.startswith("all-reduce"):
+        payload = out_b
+        wire = 2.0 * out_b * (g - 1) / max(g, 1)
+    elif op.kind.startswith("reduce-scatter"):
+        payload = out_b * g  # input is g x output
+        wire = out_b * (g - 1)
+    elif op.kind.startswith("all-to-all"):
+        payload = out_b
+        wire = out_b * (g - 1) / max(g, 1)
+    elif op.kind.startswith("collective-permute"):
+        payload = out_b
+        wire = out_b
+    elif op.kind.startswith("collective-broadcast"):
+        payload = out_b
+        wire = out_b * (g - 1) / max(g, 1)
+    else:
+        payload = out_b
+        wire = out_b
+    return payload, wire, g
+
+
+_SKIP_BYTES_KINDS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "token", "partition-id", "replica-id", "iota",
+}
+
+
+def _fusion_body(comps: dict[str, _Computation], op: _Op) -> _Computation | None:
+    m = re.search(r"calls=%?([\w.\-]+)", op.line)
+    return comps.get(m.group(1)) if m else None
+
+
+def _fusion_output_bytes(comps: dict[str, _Computation], op: _Op) -> float:
+    """Write traffic of a fusion: a dynamic-update-slice ROOT (or a tuple of
+    them) aliases its buffer in place, so only the updated window is written
+    (this is how scan residual stacking appears — charging the full stack per
+    iteration would overcount by the trip count)."""
+    out_b = _shape_bytes(op.out_type)
+    body = _fusion_body(comps, op)
+    if body is None or not body.order:
+        return out_b
+
+    def _root_bytes(name: str) -> float:
+        o = body.ops.get(name)
+        if o is None:
+            return 0.0
+        if o.kind == "dynamic-update-slice" and len(o.operands) > 1:
+            upd = o.operands[1]
+            if upd in body.ops:
+                return _shape_bytes(body.ops[upd].out_type)
+        return _shape_bytes(o.out_type)
+
+    root = body.ops[body.order[-1]]
+    if root.kind == "tuple":
+        return sum(_root_bytes(o) for o in root.operands)
+    return _root_bytes(root.name)
+
+
+def _fusion_operand_bytes(comps: dict[str, _Computation], comp: _Computation, op: _Op) -> float:
+    """Bytes read by a fusion: parameters consumed only through slices (or as
+    the in-place buffer of a dynamic-update-slice) are charged at the touched
+    window size (mirrors XLA's fusion-aware cost analysis)."""
+    body = _fusion_body(comps, op)
+    full = [
+        _shape_bytes(comp.ops[o].out_type) if o in comp.ops else 0.0 for o in op.operands
+    ]
+    if body is None:
+        return sum(full)
+    # body parameter name by index
+    pidx: dict[str, int] = {}
+    for opn in body.order:
+        bop = body.ops[opn]
+        if bop.kind == "parameter":
+            mi = re.search(r"parameter\((\d+)\)", bop.line)
+            if mi:
+                pidx[opn] = int(mi.group(1))
+    total = 0.0
+    for pname, i in pidx.items():
+        if i >= len(full):
+            continue
+        uses = [body.ops[o] for o in body.order if pname in body.ops[o].operands]
+        if not uses:
+            continue
+        window = 0.0
+        ok = True
+        for u in uses:
+            if u.kind in ("slice", "dynamic-slice", "gather"):
+                window += _shape_bytes(u.out_type)
+            elif u.kind == "dynamic-update-slice" and u.operands and u.operands[0] == pname:
+                window += 0.0  # aliased in-place buffer: no read
+            else:
+                ok = False
+                break
+        total += window if ok else full[i]
+    return total
+
+
+def _dot_flops_of(comp: _Computation, op: _Op) -> float:
+    """2 * prod(out dims) * prod(contracted lhs dims) for a dot op."""
+    out_dims = _shape_dims(op.out_type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    lhs_ref = op.operands[0] if op.operands else None
+    if m is None or lhs_ref is None or lhs_ref not in comp.ops:
+        # fall back: assume square contraction of the last out dim
+        return 2.0 * math.prod(out_dims) * (out_dims[-1] if out_dims else 1)
+    lhs_dims = _shape_dims(comp.ops[lhs_ref].out_type)
+    k = 1
+    for idx in m.group(1).split(","):
+        if idx != "" and int(idx) < len(lhs_dims):
+            k *= lhs_dims[int(idx)]
+    return 2.0 * math.prod(out_dims) * k
+
+
+def analyze_hlo(text: str, default_trip: int = 1) -> HloReport:
+    """Parse optimized HLO text into trip-aware per-device cost terms."""
+    comps = _parse_computations(text)
+    if not comps:
+        return HloReport(0.0, {}, 0.0, 0.0, [], {}, "")
+    entry = _entry_name(text, comps)
+    mult = _compute_multipliers(comps, entry, default_trip)
+
+    # Computations only ever referenced as fusion/reduce bodies execute in
+    # registers: exclude them from bytes-accessed (but keep their dots).
+    fused_only: set[str] = set()
+    referenced_as: dict[str, set[str]] = defaultdict(set)
+    for comp in comps.values():
+        for opn in comp.order:
+            for rel, callee in _callees(comp.ops[opn]):
+                referenced_as[callee].add(rel)
+    for name, rels in referenced_as.items():
+        if rels <= {"calls", "to_apply"}:
+            fused_only.add(name)
+
+    sites: list[CollectiveSite] = []
+    by_kind: dict[str, float] = defaultdict(float)
+    dot_flops = 0.0
+    bytes_accessed = 0.0
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for opn in comp.order:
+            op = comp.ops[opn]
+            base_kind = op.kind.removesuffix("-start").removesuffix("-done")
+            if op.kind.endswith("-done"):
+                continue  # counted at the -start op
+            if base_kind in _COLLECTIVES:
+                payload, wire, g = _collective_wire_bytes(op)
+                site = CollectiveSite(
+                    kind=base_kind, computation=cname, payload_bytes=payload,
+                    wire_bytes=wire, group_size=g, multiplier=m, op_name=op.name,
+                )
+                sites.append(site)
+                by_kind[base_kind] += site.total_wire_bytes
+            if op.kind == "dot":
+                dot_flops += m * _dot_flops_of(comp, op)
+            if op.kind not in _SKIP_BYTES_KINDS and cname not in fused_only:
+                out_b = _shape_bytes(op.out_type)
+                if op.kind in ("while", "conditional", "call"):
+                    b = 0.0  # bodies are counted through their multipliers
+                elif op.kind in ("dynamic-slice", "gather", "slice"):
+                    b = 2.0 * out_b  # reads only the sliced window
+                elif op.kind == "dynamic-update-slice":
+                    upd = op.operands[1] if len(op.operands) > 1 else None
+                    ub = _shape_bytes(comp.ops[upd].out_type) if upd in comp.ops else out_b
+                    b = 2.0 * ub  # touches only the updated window
+                elif op.kind == "fusion":
+                    b = _fusion_output_bytes(comps, op) + _fusion_operand_bytes(
+                        comps, comp, op
+                    )
+                else:
+                    operand_b = sum(
+                        _shape_bytes(comp.ops[o].out_type)
+                        for o in op.operands
+                        if o in comp.ops
+                    )
+                    b = out_b + operand_b
+                bytes_accessed += m * b
+
+    return HloReport(
+        collective_wire_bytes=sum(s.total_wire_bytes for s in sites),
+        collective_by_kind=dict(by_kind),
+        dot_flops=dot_flops,
+        bytes_accessed=bytes_accessed,
+        sites=sites,
+        multipliers=mult,
+        entry=entry,
+    )

@@ -1,0 +1,5 @@
+"""Checkpointing: atomic, async, elastic (mesh-independent restore)."""
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+__all__ = ["Checkpointer"]

@@ -1,0 +1,7 @@
+"""Core: the paper's contribution — I/O lower bounds and COnfLUX LU.
+
+Submodules (import directly; kept lazy to avoid pulling jax for pure-math use):
+    repro.core.xpart — X-partitioning lower-bound machinery
+    repro.core.lu    — COnfLUX / baselines / cost models
+    repro.core.solve — lu_factor / lu_solve / slogdet front-end
+"""

@@ -1,0 +1,34 @@
+"""COnfLUX and baselines: near-communication-optimal parallel LU (paper §7)."""
+
+from repro.core.lu.sequential import (
+    masked_lup,
+    lu_masked_sequential,
+    unpack_factors,
+    reconstruct,
+)
+from repro.core.lu.grid import GridConfig, optimize_grid
+from repro.core.lu.cost_models import (
+    conflux_model,
+    candmc_model,
+    scalapack2d_model,
+    slate_model,
+    COMM_MODELS,
+)
+from repro.core.lu.conflux import conflux_lu, distributed_lu, lu_comm_volume
+
+__all__ = [
+    "masked_lup",
+    "lu_masked_sequential",
+    "unpack_factors",
+    "reconstruct",
+    "GridConfig",
+    "optimize_grid",
+    "conflux_model",
+    "candmc_model",
+    "scalapack2d_model",
+    "slate_model",
+    "COMM_MODELS",
+    "conflux_lu",
+    "distributed_lu",
+    "lu_comm_volume",
+]

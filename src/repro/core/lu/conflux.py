@@ -1,0 +1,319 @@
+"""COnfLUX — near-communication-optimal 2.5D LU factorization (paper §7).
+
+Layout.  P = Px*Py*c processors form a (px, py, pz) mesh.  A is distributed
+v x v tile-block-cyclically over (px, py): global tile (bi, bj) lives on
+(bi % Px, bj % Py) at local tile (bi // Px, bj // Py).  The pz axis holds the
+2.5D replication layers: layer 0 stores the base matrix, and each layer
+accumulates the Schur updates of the steps t with t % c == layer.  The true
+current value of any entry is therefore the *sum over pz* of the local
+partials — materialized lazily (the paper's "Reduce next block column").
+
+Schedule per step t (Algorithm 1):
+  1. reduce the panel block-column over pz                       (psum 'pz')
+  2. tournament pivoting along px: local masked LUP -> butterfly (ppermute 'px')
+  3. broadcast factored A00 + pivot ids to all py                (psum 'py')
+  4. L10 := A10 U00^-1 on the owner column; broadcast along py   (psum 'py')
+  5. gather pivot rows over (px, pz); U01 := L00^-1 R01          (psum 'px','pz')
+  6. Schur update A11 -= L10 @ U01 on layer t % c                (local GEMM)
+  7. write L10 / A00 / U01 into the output factors               (local)
+
+Row masking: no row is ever moved; `active` weights mask pivoted rows and
+the pivot order is tracked as an index vector (paper §7.3).
+
+SPMD note (CPU backend).  A real deployment executes the step-1/4/5
+collectives only on the processors the schedule involves (conditional on
+py == t % Py or pz == t % c).  XLA:CPU's in-process communicator requires
+every device to join every collective (conditional collectives deadlock its
+rendezvous), so this port executes them unconditionally with masked
+payloads — numerically identical, but the *executed* volume exceeds the
+schedule's.  Communication volume is therefore accounted by
+`lu_comm_volume`, which instruments the exact schedule (payload x group per
+collective call site) the way the paper instruments MPI with Score-P.  On a
+real TPU deployment the conditional schedule compiles and runs as-is.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.lu.cost_models import conflux_model
+from repro.core.lu.grid import GridConfig, optimize_grid
+from repro.core.lu.sequential import masked_lup
+
+
+# ---------------------------------------------------------------------------
+# Block-cyclic layout helpers (shared with tests and the 2D baseline).
+# ---------------------------------------------------------------------------
+
+def block_cyclic_scatter(A: np.ndarray, Px: int, Py: int, v: int) -> np.ndarray:
+    """A [N, N] -> blocks [Px, Py, R, C] with v x v tile-cyclic ownership."""
+    N = A.shape[0]
+    nbi = N // v
+    R, C = (nbi // Px) * v, (nbi // Py) * v
+    out = np.zeros((Px, Py, R, C), A.dtype)
+    for bi in range(nbi):
+        for bj in range(nbi):
+            li, lj = bi // Px, bj // Py
+            out[bi % Px, bj % Py, li * v:(li + 1) * v, lj * v:(lj + 1) * v] = \
+                A[bi * v:(bi + 1) * v, bj * v:(bj + 1) * v]
+    return out
+
+
+def block_cyclic_gather(blocks: np.ndarray, N: int, v: int) -> np.ndarray:
+    """Inverse of block_cyclic_scatter."""
+    Px, Py = blocks.shape[:2]
+    A = np.zeros((N, N), blocks.dtype)
+    nbi = N // v
+    for bi in range(nbi):
+        for bj in range(nbi):
+            li, lj = bi // Px, bj // Py
+            A[bi * v:(bi + 1) * v, bj * v:(bj + 1) * v] = blocks[
+                bi % Px, bj % Py, li * v:(li + 1) * v, lj * v:(lj + 1) * v
+            ]
+    return A
+
+
+# ---------------------------------------------------------------------------
+# The distributed factorization (shard_map body).
+# ---------------------------------------------------------------------------
+
+def _local_lu(cfg: GridConfig, pivot: str, Aloc):
+    """Local program for device (px, py, pz).  Aloc: [1, 1, R, C] local block.
+
+    pivot: "tournament" (COnfLUX, butterfly merge along px) or "partial"
+    (ScaLAPACK-style column-by-column global argmax — the 2D baseline)."""
+    Px, Py, c, v, N = cfg.Px, cfg.Py, cfg.c, cfg.v, cfg.N
+    px = jax.lax.axis_index("px")
+    py = jax.lax.axis_index("py")
+    pz = jax.lax.axis_index("pz")
+    Aloc = Aloc[0, 0]
+    R, C = Aloc.shape
+    dtype = Aloc.dtype
+    nsteps = N // v
+    rounds = max(int(math.log2(Px)), 0)
+
+    # Global ids of my local rows / cols (tile-cyclic).
+    lrow = jnp.arange(R)
+    lcol = jnp.arange(C)
+    row_gid = ((lrow // v * Px + px) * v + lrow % v).astype(jnp.int32)
+    col_gid = ((lcol // v * Py + py) * v + lcol % v).astype(jnp.int32)
+
+    # Layer pz==0 holds the base matrix; other layers accumulate partials only.
+    Aloc = jnp.where(pz == 0, Aloc, jnp.zeros_like(Aloc))
+    Floc = jnp.zeros_like(Aloc)
+
+    def tournament(panel_vals, weights):
+        """Local masked LUP -> butterfly merge along px.  Returns packed A00
+        factors [v, v] (in elimination order) and winners' global ids [v]."""
+        _, order, ok = masked_lup(panel_vals, weights, v)
+        cand_vals = panel_vals[order, :]  # original values of local winners
+        valid = ok & (weights[order] > 0)
+        cand_gids = jnp.where(valid, row_gid[order], -1)
+        for r in range(rounds):
+            perm = [(i, i ^ (1 << r)) for i in range(Px)]
+            other_vals = jax.lax.ppermute(cand_vals, "px", perm)
+            other_gids = jax.lax.ppermute(cand_gids, "px", perm)
+            vals2 = jnp.concatenate([cand_vals, other_vals], axis=0)  # [2v, v]
+            gids2 = jnp.concatenate([cand_gids, other_gids], axis=0)
+            w2 = (gids2 >= 0).astype(dtype)
+            _, order2, ok2 = masked_lup(vals2, w2, v)
+            cand_vals = vals2[order2, :]
+            cand_gids = jnp.where(ok2, gids2[order2], -1)
+        A00p, order_f, ok_f = masked_lup(cand_vals, (cand_gids >= 0).astype(dtype), v)
+        return A00p[order_f, :], jnp.where(ok_f, cand_gids[order_f], -1)
+
+    def partial_pivot(panel_vals, weights):
+        """ScaLAPACK-style panel factorization: per column, a global argmax
+        over px picks the pivot; the pivot row is broadcast and eliminated.
+        Same (A00, gids) interface as `tournament` (A00 in elimination order,
+        already consistent on every px)."""
+
+        def col_round(k, carry):
+            F, w, A00, gids = carry
+            col = jnp.abs(F[:, k]) * w
+            lmax = jnp.max(col)
+            larg = jnp.argmax(col)
+            gmax = jax.lax.pmax(lmax, "px")
+            cand = jnp.where((lmax == gmax) & (lmax > 0), row_gid[larg], -1)
+            g = jax.lax.pmax(cand, "px")  # deterministic tie-break: larger gid
+            mine = (row_gid == g).astype(dtype)  # [R] one-hot (zero if remote)
+            prow = jax.lax.psum(mine @ F, "px")  # [v] packed pivot row
+            pv = prow[k]
+            safe = jnp.where(jnp.abs(pv) > 0, pv, 1.0)
+            w = w * (1.0 - mine)
+            active = w > 0
+            mult = jnp.where(active, F[:, k] / safe, F[:, k])
+            F = F.at[:, k].set(mult)
+            colmask = (jnp.arange(v) > k).astype(dtype)
+            F = F - jnp.outer(jnp.where(active, mult, 0.0), prow * colmask)
+            return (F, w, A00.at[k].set(prow), gids.at[k].set(g))
+
+        init = (panel_vals, weights, jnp.zeros((v, v), dtype), jnp.full((v,), -1, jnp.int32))
+        _, _, A00, gids = jax.lax.fori_loop(0, v, col_round, init)
+        return A00, gids
+
+    def step(t, carry):
+        Aloc, Floc, active, rows = carry
+        lc0 = (t // Py) * v  # local tile-column index of the panel (owner py)
+        is_owner_col = py == (t % Py)
+        ow = is_owner_col.astype(dtype)
+
+        # -- 1. Reduce the panel block-column over pz. ------------------------
+        my_panel = jax.lax.dynamic_slice(Aloc, (0, lc0), (R, v))
+        panel = jax.lax.psum(my_panel, "pz")  # base + all pending partials
+
+        # -- 2. Pivoting along px (meaningful on the owner column). ----------
+        if pivot == "tournament":
+            A00, piv_gids = tournament(panel, active)
+        else:
+            A00, piv_gids = partial_pivot(panel, active)
+
+        # -- 3. Broadcast A00 + pivot ids from the owner column to all py. ----
+        A00 = jax.lax.psum(A00 * ow, "py")
+        piv_gids = jax.lax.psum(jnp.where(is_owner_col, piv_gids, 0), "py")
+
+        L00 = jnp.tril(A00, -1) + jnp.eye(v, dtype=dtype)
+        U00 = jnp.triu(A00)
+        S = (row_gid[:, None] == piv_gids[None, :]).astype(dtype)  # [R, v]
+        is_new_piv = S.sum(1)
+        new_active = active * (1.0 - is_new_piv)
+
+        # -- 4. L10 on the owner column, broadcast along py. ------------------
+        L10_own = jax.scipy.linalg.solve_triangular(
+            U00.T, (panel * new_active[:, None]).T, lower=True
+        ).T
+        L10 = jax.lax.psum(L10_own * ow, "py")  # [R, v]
+
+        # -- 5. Pivot rows gathered over (px, pz); local TRSM -> U01. ---------
+        R01 = jax.lax.psum(S.T @ Aloc, ("px", "pz"))  # [v, C] current values
+        trailing = (col_gid >= (t + 1) * v).astype(dtype)  # [C]
+        U01 = jax.scipy.linalg.solve_triangular(L00, R01, lower=True, unit_diagonal=True)
+        U01 = U01 * trailing[None, :]
+
+        # -- 6. Schur update on layer t % c (2.5D update partitioning). -------
+        on_layer = (pz == (t % c)).astype(dtype)
+        Aloc = Aloc - on_layer * (L10 * new_active[:, None]) @ U01
+
+        # -- 7. Write factors (identical on every pz layer). ------------------
+        # Panel column block: still-active rows get multipliers, new pivot
+        # rows their packed A00 rows; rows pivoted in EARLIER steps keep the
+        # U01 values written back then.
+        prev = jax.lax.dynamic_slice(Floc, (0, lc0), (R, v))
+        was_piv = (1.0 - active)[:, None]
+        Fpanel = L10 * new_active[:, None] + S @ A00 + prev * was_piv
+        panel_cols = (col_gid >= t * v) & (col_gid < (t + 1) * v)  # [C]
+        Floc = jnp.where(
+            panel_cols[None, :],
+            jax.lax.dynamic_update_slice(Floc, Fpanel, (0, lc0)),
+            Floc,
+        )
+        Floc = Floc + S @ U01  # new pivot rows' trailing columns
+
+        rows = jax.lax.dynamic_update_slice(rows, piv_gids, (t * v,))
+        return (Aloc, Floc, new_active, rows)
+
+    active0 = jnp.ones(R, dtype)
+    rows0 = jnp.zeros(N, jnp.int32)
+    _, Floc, _, rows = jax.lax.fori_loop(0, nsteps, step, (Aloc, Floc, active0, rows0))
+    return Floc[None, None], rows
+
+
+@dataclass
+class LUResult:
+    F: np.ndarray  # packed factors, original row positions [N, N]
+    rows: np.ndarray  # pivot order (global row ids) [N]
+    grid: GridConfig
+    comm: dict = field(default_factory=dict)
+
+
+def make_lu_mesh(cfg: GridConfig, devices=None) -> jax.sharding.Mesh:
+    devices = devices if devices is not None else jax.devices()
+    need = cfg.Px * cfg.Py * cfg.c
+    if len(devices) < need:
+        raise ValueError(f"grid {cfg} needs {need} devices, have {len(devices)}")
+    arr = np.asarray(devices[:need]).reshape(cfg.Px, cfg.Py, cfg.c)
+    return jax.sharding.Mesh(arr, ("px", "py", "pz"))
+
+
+def conflux_lu(A, grid: GridConfig | None = None, P_target: int | None = None,
+               M: float = 2**14, mesh=None, pivot: str = "tournament") -> LUResult:
+    """Factorize A (N x N) with the COnfLUX schedule on available devices.
+
+    Returns packed masked factors + pivot order (see sequential.unpack_factors)
+    and the instrumented per-processor communication volume of the schedule.
+    """
+    A = np.asarray(A)
+    N = A.shape[0]
+    if grid is None:
+        P_target = P_target or len(jax.devices())
+        grid = optimize_grid(N, P_target, M)
+    mesh = mesh or make_lu_mesh(grid)
+    blocks = block_cyclic_scatter(A, grid.Px, grid.Py, grid.v)
+    fn = jax.jit(
+        jax.shard_map(
+            functools.partial(_local_lu, grid, pivot),
+            mesh=mesh,
+            in_specs=P("px", "py", None, None),
+            out_specs=(P("px", "py", None, None), P()),
+            check_vma=False,
+        )
+    )
+    Fblocks, rows = fn(blocks)
+    F = block_cyclic_gather(np.asarray(Fblocks), N, grid.v)
+    rows = np.asarray(rows).astype(np.int64)
+    return LUResult(F=F, rows=rows, grid=grid, comm=lu_comm_volume(N, grid, pivot=pivot))
+
+
+def distributed_lu(A, **kw) -> LUResult:
+    """Public entry point with automatic Processor Grid Optimization."""
+    return conflux_lu(A, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Instrumented communication volume of the schedule (elements, per processor).
+# ---------------------------------------------------------------------------
+
+def lu_comm_volume(N: int, grid: GridConfig, pivot: str = "tournament") -> dict:
+    """Exact per-collective accounting of the COnfLUX schedule.
+
+    For each collective call site we count the elements each *participating*
+    processor transfers (ring all-reduce of payload S over g members:
+    2*S*(g-1)/g per member; butterfly round: payload per member; masked
+    broadcast: payload to each receiver), per step, summed over the schedule
+    and averaged over all P — the paper's "communication volume per node".
+    """
+    Px, Py, c, v = grid.Px, grid.Py, grid.c, grid.v
+    Ptot = Px * Py * c
+    rounds = max(int(math.log2(Px)), 0)
+    vol = dict.fromkeys(
+        ("panel_reduce", "pivot_tournament", "a00_bcast", "l10_bcast", "u01_gather"), 0.0
+    )
+    for t in range(N // v):
+        rem = max(N - (t + 1) * v, 0)  # trailing size
+        rloc = (N - t * v) / Px  # panel rows per owner-column proc
+        cloc = rem / Py  # trailing cols per proc
+        # 1. panel reduce over pz: owner column only (Px procs x c layers).
+        vol["panel_reduce"] += Px * c * (2 * rloc * v * (c - 1) / c)
+        # 2. tournament butterfly on the owner column (values + ids per round).
+        if pivot == "tournament":
+            vol["pivot_tournament"] += Px * c * rounds * (v * v + v)
+        else:  # partial pivoting: per column, argmax reduce + pivot-row psum
+            vol["pivot_tournament"] += Px * c * v * (v + 2) * 2.0 * (Px - 1) / max(Px, 1)
+        # 3. A00 + pivot ids broadcast to every proc.
+        vol["a00_bcast"] += Ptot * (v * v + v)
+        # 4. L10 broadcast along py — but only to layer t % c (the Schur
+        #    owner), so Px * Py procs receive their rows' multipliers.
+        vol["l10_bcast"] += Px * Py * rloc * v
+        # 5. pivot-row gather + U01 to the Schur layer: v x cloc per proc.
+        vol["u01_gather"] += Px * Py * v * cloc
+    out = {k: val / Ptot for k, val in vol.items()}
+    out["total"] = sum(out.values())
+    out["model_lemma10"] = conflux_model(N, Ptot, M=max(N * N * c / Ptot, 4.0), v=v)
+    return out

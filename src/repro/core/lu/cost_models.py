@@ -1,0 +1,63 @@
+"""Parallel I/O cost models of LU implementations (paper Table 2).
+
+All models return *elements communicated per processor* (multiply by the
+element size for bytes).  Leading-order terms from Table 2:
+
+    LibSci / ScaLAPACK (2D):  N^2 / sqrt(P)
+    SLATE (2D):               N^2 / sqrt(P)
+    CANDMC (2.5D):            5 N^3 / (P sqrt(M))
+    COnfLUX (this paper):     N^3 / (P sqrt(M))
+
+The paper's Table 2 validates these models against Score-P measurements at
+97-103% for LibSci/SLATE/COnfLUX (196% for CANDMC, which over-provisions);
+benchmarks/table2.py reproduces the modeled GB columns exactly.
+"""
+
+from __future__ import annotations
+
+import math
+
+
+def scalapack2d_model(N: float, P: int, M: float | None = None, nb: int = 64) -> float:
+    """Cray LibSci / ScaLAPACK 2D block-cyclic with partial pivoting.
+
+    Per-proc volume ~ N^2/sqrt(P) (panel broadcasts) + N^2/sqrt(P) (row
+    swaps + trailing updates) — Table 2 keeps the N^2/sqrt(P) leading term
+    with an O(N^2/P) correction.
+    """
+    return N**2 / math.sqrt(P) + N**2 / P
+
+
+def slate_model(N: float, P: int, M: float | None = None, nb: int = 16) -> float:
+    """SLATE: 2D block decomposition; same leading term as ScaLAPACK."""
+    return N**2 / math.sqrt(P) + N**2 / P
+
+
+def candmc_model(N: float, P: int, M: float) -> float:
+    """CANDMC 2.5D LU [Solomonik & Demmel]: 5 N^3/(P sqrt(M)) leading term."""
+    return 5 * N**3 / (P * math.sqrt(M)) + N**2 / (P * math.sqrt(M))
+
+
+def conflux_model(N: float, P: int, M: float, v: float | None = None) -> float:
+    """COnfLUX (Lemma 10): N^3/(P sqrt(M)) + O(N^2/P).
+
+    The lower-order term sums Algorithm 1's steps 1-6 per-step costs; see
+    repro.core.xpart.lu_bound.conflux_io_cost for the per-step breakdown.
+    """
+    from repro.core.xpart.lu_bound import conflux_io_cost
+
+    return conflux_io_cost(N, P, M, v=v)
+
+
+COMM_MODELS = {
+    "LibSci": scalapack2d_model,
+    "SLATE": slate_model,
+    "CANDMC": candmc_model,
+    "COnfLUX": conflux_model,
+}
+
+
+def model_gigabytes(name: str, N: float, P: int, M: float, element_bytes: int = 8) -> float:
+    """Total communicated volume across all P processors, in GB (Table 2 rows)."""
+    per_proc = COMM_MODELS[name](N, P, M)
+    return per_proc * P * element_bytes / 1e9

@@ -1,0 +1,74 @@
+"""Public linear-algebra front-end built on COnfLUX (paper §7).
+
+`lu_factor` picks the COnfLUX 2.5D schedule when multiple devices are
+available and falls back to the sequential masked LU otherwise; `lu_solve`
+and `det` consume the packed masked factors.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lu.sequential import lu_masked_sequential, unpack_factors
+
+
+def lu_factor(A, v: int = 32, distributed: bool | None = None, **kw):
+    """Masked LU of A.  Returns (F, rows): packed factors + pivot order."""
+    A = jnp.asarray(A)
+    n_dev = len(jax.devices())
+    if distributed is None:
+        distributed = n_dev > 1 and A.shape[0] % (v * 2) == 0
+    if distributed:
+        from repro.core.lu.conflux import distributed_lu
+
+        res = distributed_lu(np.asarray(A), **kw)
+        return jnp.asarray(res.F), jnp.asarray(res.rows)
+    vv = min(v, A.shape[0])
+    while A.shape[0] % vv:  # panel width must divide N
+        vv -= 1
+    return lu_masked_sequential(A, v=vv)
+
+
+def lu_solve(F, rows, b):
+    """Solve A x = b given packed masked factors (PA = LU => x = U^-1 L^-1 Pb)."""
+    _, L, U = unpack_factors(F, rows)
+    pb = jnp.asarray(b)[jnp.asarray(rows)]
+    y = jax.scipy.linalg.solve_triangular(L, pb, lower=True, unit_diagonal=True)
+    return jax.scipy.linalg.solve_triangular(U, y, lower=False)
+
+
+def solve(A, b, **kw):
+    """Direct dense solve via COnfLUX."""
+    F, rows = lu_factor(A, **kw)
+    return lu_solve(F, rows, b)
+
+
+def slogdet(A, **kw):
+    """(sign, log|det|) from the masked factors (overflow-safe)."""
+    F, rows = lu_factor(A, **kw)
+    _, _, U = unpack_factors(F, rows)
+    d = jnp.diag(U)
+    rows_np = np.asarray(rows)
+    n = len(rows_np)
+    # permutation sign by cycle decomposition of the pivot order
+    seen = np.zeros(n, bool)
+    sign = 1.0
+    for i in range(n):
+        if seen[i]:
+            continue
+        j, clen = i, 0
+        while not seen[j]:
+            seen[j] = True
+            j = int(rows_np[j])
+            clen += 1
+        if clen % 2 == 0:
+            sign = -sign
+    return sign * jnp.prod(jnp.sign(d)), jnp.sum(jnp.log(jnp.abs(d)))
+
+
+def det(A, **kw):
+    """Determinant (use slogdet for large N to avoid overflow)."""
+    s, ld = slogdet(A, **kw)
+    return s * jnp.exp(ld)

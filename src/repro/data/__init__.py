@@ -1,0 +1,5 @@
+"""Deterministic, restart-safe synthetic data pipeline."""
+
+from repro.data.pipeline import DataConfig, synthetic_batch, data_iterator
+
+__all__ = ["DataConfig", "synthetic_batch", "data_iterator"]

@@ -1,0 +1,60 @@
+"""Synthetic LM data, deterministically keyed by (seed, step).
+
+Restart safety: batch(step) is a pure function, so resuming from a
+checkpoint at step k replays the identical stream — the fault-tolerance test
+asserts bitwise-equal training curves across an injected crash.
+
+`copy` mode emits sequences whose second half repeats the first (with a
+Zipf-ish unigram prior), so small models show fast, visible learning in the
+end-to-end examples — unlike uniform noise, whose loss floor is ln(V).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    mode: str = "copy"  # copy | uniform
+    seed: int = 0
+
+
+def synthetic_batch(cfg: DataConfig, step: int, model_cfg=None) -> dict:
+    key = jax.random.fold_in(jax.random.key(cfg.seed), step)
+    B, S, V = cfg.global_batch, cfg.seq_len, cfg.vocab
+    if cfg.mode == "uniform":
+        tokens = jax.random.randint(key, (B, S), 0, V)
+    else:
+        half = S // 2
+        logits = -1.2 * jnp.log1p(jnp.arange(V, dtype=jnp.float32))  # Zipf prior
+        prefix = jax.random.categorical(key, logits, shape=(B, half))
+        tokens = jnp.concatenate([prefix, prefix], axis=1)[:, :S]
+    labels = jnp.roll(tokens, -1, axis=1)
+    batch = {"tokens": tokens, "labels": labels}
+    if model_cfg is not None:
+        if model_cfg.input_mode == "frames":
+            fkey = jax.random.fold_in(key, 1)
+            batch = {
+                "frames": jax.random.normal(fkey, (B, S, model_cfg.d_model), jnp.float32),
+                "labels": labels,
+            }
+        elif model_cfg.input_mode == "tokens+patches":
+            pkey = jax.random.fold_in(key, 2)
+            batch["patch_embeds"] = jax.random.normal(
+                pkey, (B, model_cfg.n_patches, model_cfg.d_model), jnp.float32
+            )
+    return batch
+
+
+def data_iterator(cfg: DataConfig, start_step: int = 0, model_cfg=None):
+    step = start_step
+    while True:
+        yield step, synthetic_batch(cfg, step, model_cfg)
+        step += 1

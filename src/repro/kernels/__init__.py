@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot spots + LM attention/SSM.
+
+Each kernel module exposes a pallas_call implementation with explicit
+BlockSpec VMEM tiling; ops.py holds the jit'd public wrappers (interpret
+mode on CPU, compiled on TPU); ref.py holds the pure-jnp oracles used by
+the allclose sweeps in tests/test_kernels.py.
+"""

@@ -1,0 +1,103 @@
+"""Flash attention forward kernel (causal / sliding-window / softcap GQA).
+
+Grid (batch*kv_head, q_blocks, kv_blocks); kv is the fastest dimension so
+the online-softmax accumulators (m, l, acc) persist in VMEM scratch across
+kv steps of one q tile.  Q/K/V tiles are staged HBM -> VMEM by BlockSpecs;
+the two matmuls hit the MXU with (bq, hd) x (hd, bkv) and (bq, bkv) x
+(bkv, hd) shapes — bq = bkv = 128 aligns both to the systolic array.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq: int, bkv: int, n_kv_blocks: int, causal: bool,
+            window, softcap, scale: float, gq: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # [bq*gq, hd] (gq query heads packed per kv head)
+    k = k_ref[0]  # [bkv, hd]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [bq*gq, bkv]
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq * gq, bkv), 0) // gq
+    k_pos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq * gq, bkv), 1)
+    ok = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    softcap: float | None = None, bq: int = 128, bkv: int = 128,
+                    interpret: bool = False):
+    """q [B,S,H,hd]; k,v [B,S,KV,hd] -> [B,S,H,hd] (H % KV == 0)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    gq = H // KV
+    bq = min(bq, S)
+    bkv = min(bkv, S)
+    assert S % bq == 0 and S % bkv == 0
+    scale = hd**-0.5
+
+    # layout: fold (B, KV) into the slowest grid dim; queries packed per kv head
+    qr = q.reshape(B, S, KV, gq, hd).transpose(0, 2, 1, 3, 4).reshape(B * KV, S * gq, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+
+    grid = (B * KV, S // bq, S // bkv)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, bq=bq, bkv=bkv, n_kv_blocks=grid[2], causal=causal,
+            window=window, softcap=softcap, scale=scale, gq=gq,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq * gq, hd), lambda b, i, j: (b, i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, bkv, hd), lambda b, i, j: (b, j, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, bkv, hd), lambda b, i, j: (b, j, 0), memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((1, bq * gq, hd), lambda b, i, j: (b, i, 0),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((B * KV, S * gq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq * gq, 1), jnp.float32),
+            pltpu.VMEM((bq * gq, 1), jnp.float32),
+            pltpu.VMEM((bq * gq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, KV, S, gq, hd).transpose(0, 2, 1, 3, 4).reshape(B, S, H, hd)

@@ -1,0 +1,72 @@
+"""Masked panel LUP kernel (COnfLUX tournament local factorization, step 1).
+
+One program factorizes an [R, v] panel held entirely in VMEM: v rounds of
+(masked argmax pivot -> scale column -> rank-1 trailing update), with row
+masking instead of swaps (paper §7.3).  R*v stays comfortably inside VMEM
+for tournament panels (R <= 4096, v <= 128 -> <= 2 MB fp32).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(panel_ref, w_ref, f_ref, order_ref, ok_ref, *, v: int):
+    F = panel_ref[...]
+    w = w_ref[...]
+    R = F.shape[0]
+    order0 = jnp.zeros((v,), jnp.int32)
+    ok0 = jnp.zeros((v,), jnp.int32)
+
+    def body(k, carry):
+        F, w, order, ok = carry
+        col = jnp.abs(F[:, k]) * w
+        p = jnp.argmax(col).astype(jnp.int32)
+        ok = ok.at[k].set((col[p] > 0.0).astype(jnp.int32))
+        order = order.at[k].set(p)
+        w = w * (1.0 - (jax.lax.broadcasted_iota(jnp.int32, (R,), 0) == p))
+        pivval = F[p, k]
+        safe = jnp.where(jnp.abs(pivval) > 0.0, pivval, 1.0)
+        active = w > 0.0
+        mult = jnp.where(active, F[:, k] / safe, F[:, k])
+        F = F.at[:, k].set(mult)
+        colmask = (jax.lax.broadcasted_iota(jnp.int32, (v,), 0) > k).astype(F.dtype)
+        F = F - jnp.outer(jnp.where(active, mult, 0.0), F[p, :] * colmask)
+        return F, w, order, ok
+
+    F, w, order, ok = jax.lax.fori_loop(0, v, body, (F, w, order0, ok0))
+    f_ref[...] = F
+    order_ref[...] = order
+    ok_ref[...] = ok
+
+
+def lu_panel(panel, weights, *, interpret: bool = False):
+    """Masked LUP of panel [R, v] with candidate weights [R].
+
+    Returns (F [R, v] packed factors, order [v] pivot rows, ok [v] validity).
+    """
+    R, v = panel.shape
+    return pl.pallas_call(
+        functools.partial(_kernel, v=v),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((R, v), lambda i: (0, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((R,), lambda i: (0,), memory_space=pltpu.VMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((R, v), lambda i: (0, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((v,), lambda i: (0,), memory_space=pltpu.VMEM),
+            pl.BlockSpec((v,), lambda i: (0,), memory_space=pltpu.VMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, v), panel.dtype),
+            jax.ShapeDtypeStruct((v,), jnp.int32),
+            jax.ShapeDtypeStruct((v,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(panel, weights)

@@ -1,0 +1,60 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs in Python for correctness validation; on TPU they compile to
+Mosaic.  `interpret=None` auto-detects.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import lu_panel as _lp
+from repro.kernels import mamba_scan as _ms
+from repro.kernels import schur_update as _su
+from repro.kernels import trsm as _tr
+
+
+def _interp(flag):
+    if flag is not None:
+        return flag
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def schur_update(A, L, U, bm=128, bn=128, bk=128, interpret=None):
+    return _su.schur_update(A, L, U, bm=bm, bn=bn, bk=bk, interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lu_panel(panel, weights, interpret=None):
+    return _lp.lu_panel(panel, weights, interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("br", "interpret"))
+def trsm_right_upper(B, U, br=256, interpret=None):
+    return _tr.trsm_right_upper(B, U, br=br, interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "unit", "interpret"))
+def trsm_left_lower(L, B, bc=256, unit=True, interpret=None):
+    return _tr.trsm_left_lower(L, B, bc=bc, unit=unit, interpret=_interp(interpret))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "bq", "bkv", "interpret")
+)
+def flash_attention(q, k, v, causal=True, window=None, softcap=None,
+                    bq=128, bkv=128, interpret=None):
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        bq=bq, bkv=bkv, interpret=_interp(interpret),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "cs", "interpret"))
+def mamba_scan(a, b, C, bd=512, cs=64, interpret=None):
+    return _ms.mamba_scan(a, b, C, bd=bd, cs=cs, interpret=_interp(interpret))

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lu.sequential import masked_lup as _masked_lup_ref
+
+NEG_INF = -1e30
+
+
+def schur_update(A, L, U):
+    return (A.astype(jnp.float32) - L.astype(jnp.float32) @ U.astype(jnp.float32)).astype(A.dtype)
+
+
+def lu_panel(panel, weights):
+    F, order, ok = _masked_lup_ref(panel, weights, panel.shape[1])
+    return F, order.astype(jnp.int32), ok.astype(jnp.int32)
+
+
+def trsm_right_upper(B, U):
+    X = jax.scipy.linalg.solve_triangular(
+        U.astype(jnp.float32).T, B.astype(jnp.float32).T, lower=True
+    ).T
+    return X.astype(B.dtype)
+
+
+def trsm_left_lower(L, B, unit=True):
+    X = jax.scipy.linalg.solve_triangular(
+        L.astype(jnp.float32), B.astype(jnp.float32), lower=True, unit_diagonal=unit
+    )
+    return X.astype(B.dtype)
+
+
+def flash_attention(q, k, v, causal=True, window=None, softcap=None):
+    """Dense softmax attention (GQA), fp32 internals."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * hd**-0.5
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def mamba_scan(a, b, C):
+    """Sequential reference recurrence, fp32."""
+
+    def step(h, inp):
+        at, bt, Ct = inp
+        h = at * h + bt
+        return h, (h * Ct[:, None, :]).sum(-1)
+
+    B, S, di, N = a.shape
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    _, y = jax.lax.scan(
+        step, h0, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0), jnp.moveaxis(C, 1, 0))
+    )
+    return jnp.moveaxis(y, 0, 1)  # [B, S, di]

@@ -1,0 +1,56 @@
+"""Schur-complement update kernel:  C = A - L @ U  (COnfLUX step 11).
+
+The rank-v trailing update dominates LU FLOPs.  MXU-aligned tiling: (bm, bn)
+output tiles with a (bm, bk)x(bk, bn) accumulation loop over the contraction
+as the fastest grid dimension; the fp32 accumulator lives in VMEM scratch
+across the k-steps (HBM -> VMEM -> MXU staging is explicit in the
+BlockSpecs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, l_ref, u_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = a_ref[...].astype(jnp.float32)
+
+    acc_ref[...] -= jnp.dot(
+        l_ref[...], u_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def schur_update(A, L, U, *, bm: int = 128, bn: int = 128, bk: int = 128,
+                 interpret: bool = False):
+    """A [M,N] - L [M,K] @ U [K,N], tiled for the 128x128 MXU."""
+    M, N = A.shape
+    K = L.shape[1]
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j), memory_space=pltpu.VMEM),
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k), memory_space=pltpu.VMEM),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j), memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j), memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((M, N), A.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(A, L, U)

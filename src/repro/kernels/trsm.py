@@ -1,0 +1,83 @@
+"""Block triangular solves for the COnfLUX panel updates (steps 7/9).
+
+trsm_right_upper:  X = B @ U^-1   (L10 computation; U upper-triangular)
+trsm_left_lower:   X = L^-1 @ B   (U01 computation; L unit-lower)
+
+The v x v triangle sits in VMEM; the long dimension is tiled by the grid.
+Inside a tile the solve is a fori over the v columns/rows (forward
+substitution) — v is the paper's blocking parameter (MXU-sized, <= 256).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _right_upper_kernel(b_ref, u_ref, x_ref, *, v: int):
+    B = b_ref[...].astype(jnp.float32)
+    U = u_ref[...].astype(jnp.float32)
+
+    def body(j, X):
+        # X[:, j] = (B[:, j] - X[:, :j] @ U[:j, j]) / U[j, j]
+        partial = X @ (U[:, j] * (jax.lax.broadcasted_iota(jnp.int32, (v,), 0) < j))
+        xj = (B[:, j] - partial) / U[j, j]
+        return X.at[:, j].set(xj)
+
+    X = jax.lax.fori_loop(0, v, body, jnp.zeros_like(B))
+    x_ref[...] = X.astype(x_ref.dtype)
+
+
+def _left_lower_kernel(l_ref, b_ref, x_ref, *, v: int, unit: bool):
+    L = l_ref[...].astype(jnp.float32)
+    B = b_ref[...].astype(jnp.float32)
+
+    def body(i, X):
+        partial = (L[i, :] * (jax.lax.broadcasted_iota(jnp.int32, (v,), 0) < i)) @ X
+        xi = B[i, :] - partial
+        if not unit:
+            xi = xi / L[i, i]
+        return X.at[i, :].set(xi)
+
+    X = jax.lax.fori_loop(0, v, body, jnp.zeros_like(B))
+    x_ref[...] = X.astype(x_ref.dtype)
+
+
+def trsm_right_upper(B, U, *, br: int = 256, interpret: bool = False):
+    """X U = B  ->  X = B U^-1.  B [R, v], U [v, v] upper."""
+    R, v = B.shape
+    br = min(br, R)
+    assert R % br == 0
+    return pl.pallas_call(
+        functools.partial(_right_upper_kernel, v=v),
+        grid=(R // br,),
+        in_specs=[
+            pl.BlockSpec((br, v), lambda i: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((v, v), lambda i: (0, 0), memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((br, v), lambda i: (i, 0), memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((R, v), B.dtype),
+        interpret=interpret,
+    )(B, U)
+
+
+def trsm_left_lower(L, B, *, bc: int = 256, unit: bool = True, interpret: bool = False):
+    """L X = B  ->  X = L^-1 B.  L [v, v] (unit-)lower, B [v, C]."""
+    v, C = B.shape
+    bc = min(bc, C)
+    assert C % bc == 0
+    return pl.pallas_call(
+        functools.partial(_left_lower_kernel, v=v, unit=unit),
+        grid=(C // bc,),
+        in_specs=[
+            pl.BlockSpec((v, v), lambda i: (0, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((v, bc), lambda i: (0, i), memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((v, bc), lambda i: (0, i), memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((v, C), B.dtype),
+        interpret=interpret,
+    )(L, B)

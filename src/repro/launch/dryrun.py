@@ -1,0 +1,236 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost analysis, collective schedule and
+roofline terms.  (The XLA_FLAGS line above MUST precede every other import —
+jax locks the device count on first init.)
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                    # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+        --shape train_4k --mesh both --out results/dryrun.json
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.analysis.hlo import analyze_hlo  # noqa: E402
+from repro.analysis.roofline import roofline  # noqa: E402
+from repro.configs import ARCHS, SHAPES, applicable_shapes, get_config  # noqa: E402
+from repro.launch import specs as SP  # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_label  # noqa: E402
+from repro.models.model_zoo import build_model  # noqa: E402
+from repro.parallel.sharding import (  # noqa: E402
+    activation_sharding_ctx,
+    make_rules,
+    sanitize_pspec,
+)
+from repro.training.train_step import make_train_step  # noqa: E402
+
+
+def _shardings(mesh, pspec_tree, sds_tree=None):
+    """PartitionSpecs -> NamedShardings, sanitized against the abstract
+    shapes so non-divisible dims (40 heads / vocab 504 / batch-1 caches)
+    fall back to replication on the offending axis."""
+    is_spec = lambda x: isinstance(x, jax.sharding.PartitionSpec)  # noqa: E731
+    if sds_tree is None:
+        return jax.tree.map(
+            lambda p: jax.sharding.NamedSharding(mesh, p), pspec_tree, is_leaf=is_spec
+        )
+    return jax.tree.map(
+        lambda p, s: jax.sharding.NamedSharding(mesh, sanitize_pspec(p, s.shape, mesh)),
+        pspec_tree,
+        sds_tree,
+        is_leaf=is_spec,
+    )
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, remat: bool = True,
+               accum: int = 4, cfg_override=None, extra_metadata: dict | None = None):
+    """Lower + compile one cell.  Returns (record, compiled).
+
+    accum: gradient-accumulation microbatches for train cells — the baseline
+    uses 4 so per-device activation temporaries fit the 16 GB HBM budget at
+    global_batch=256 (recorded in the cell metadata).
+    cfg_override: callable(ModelConfig) -> ModelConfig for perf experiments."""
+    cfg = get_config(arch)
+    if cfg_override is not None:
+        cfg = cfg_override(cfg)
+    model = build_model(cfg)
+    rules = make_rules(mesh, model_cfg=cfg)
+    kind = SHAPES[shape_name].kind
+    batch_sds = SP.input_specs(cfg, shape_name)
+    batch_sh = _shardings(mesh, SP.batch_specs_for(cfg, shape_name, rules), batch_sds)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh), activation_sharding_ctx(mesh, rules):
+        if kind == "train":
+            opt_cfg = SP.opt_config_for(cfg)
+            step_fn = make_train_step(model, opt_cfg, remat=remat, accum=accum)
+            state_sds = SP.abstract_train_state(model, opt_cfg)
+            state_sh = _shardings(mesh, SP.train_state_pspecs(model, rules), state_sds)
+            lowered = jax.jit(
+                step_fn, in_shardings=(state_sh, batch_sh), out_shardings=(state_sh, None),
+            ).lower(state_sds, batch_sds)
+            trips = cfg.n_groups
+        elif kind == "prefill":
+            params_sds = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+            params_sh = _shardings(mesh, SP.tree_pspecs(model.param_specs(), rules),
+                                   params_sds)
+            caches_sds = SP.abstract_caches(model, shape_name)
+            cache_sh = _shardings(mesh, SP.cache_pspecs(model, rules), caches_sds)
+            S = SHAPES[shape_name].seq_len
+
+            def prefill_fn(params, batch):
+                return model.prefill(params, batch, max_len=S)
+
+            lowered = jax.jit(
+                prefill_fn,
+                in_shardings=(params_sh, batch_sh),
+                out_shardings=(None, cache_sh),
+            ).lower(params_sds, batch_sds)
+            trips = cfg.n_groups
+        else:  # decode
+            params_sds = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+            params_sh = _shardings(mesh, SP.tree_pspecs(model.param_specs(), rules),
+                                   params_sds)
+            caches_sds = SP.abstract_caches(model, shape_name)
+            cache_sh = _shardings(mesh, SP.cache_pspecs(model, rules), caches_sds)
+
+            def serve_step(params, caches, tokens):
+                # decode at the last cache slot: worst-case full-length attention
+                pos = jnp.int32(SHAPES[shape_name].seq_len - 1)
+                return model.decode_step(params, caches, tokens, pos)
+
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(params_sh, cache_sh, batch_sh["tokens"]),
+                out_shardings=(None, cache_sh),
+            ).lower(params_sds, caches_sds, batch_sds["tokens"])
+            trips = cfg.n_groups
+
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    rep = analyze_hlo(text, default_trip=trips)
+    n_dev = mesh.devices.size
+    mf = SP.model_flops(cfg, shape_name, n_dev)
+    rl = roofline(
+        arch=arch, shape=shape_name, mesh=mesh_label(mesh),
+        hlo_flops=rep.dot_flops, hlo_bytes=rep.bytes_accessed,
+        collective_bytes=rep.collective_wire_bytes, model_flops=mf,
+    )
+
+    def _mem_field(name):
+        return getattr(mem, name, None)
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": kind,
+        "mesh": mesh_label(mesh),
+        "n_devices": n_dev,
+        "ok": True,
+        "accum": accum if kind == "train" else None,
+        "compile_s": round(compile_s, 1),
+        "memory": {
+            "argument_bytes": _mem_field("argument_size_in_bytes"),
+            "output_bytes": _mem_field("output_size_in_bytes"),
+            "temp_bytes": _mem_field("temp_size_in_bytes"),
+            "generated_code_bytes": _mem_field("generated_code_size_in_bytes"),
+        },
+        "cost_analysis": {
+            "flops_once": cost.get("flops"),
+            "bytes_once": cost.get("bytes accessed"),
+        },
+        "hlo": {
+            "dot_flops": rep.dot_flops,
+            "bytes_accessed": rep.bytes_accessed,
+            "collective_wire_bytes": rep.collective_wire_bytes,
+            "collective_by_kind": rep.collective_by_kind,
+            "n_collective_sites": len(rep.sites),
+        },
+        "roofline": rl.row(),
+        **(extra_metadata or {}),
+    }
+    return record, compiled
+
+
+def run_cells(archs, shapes, meshes, out_path, *, resume=True):
+    results = []
+    if resume and os.path.exists(out_path):
+        with open(out_path) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results if r.get("ok")}
+
+    mesh_objs = {}
+    for m in meshes:
+        mesh_objs[m] = make_production_mesh(multi_pod=(m == "multi"))
+
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            if shape_name not in applicable_shapes(cfg):
+                continue
+            for mname, mesh in mesh_objs.items():
+                key = (arch, shape_name, mesh_label(mesh))
+                if key in done:
+                    print(f"skip {key} (cached)")
+                    continue
+                print(f"=== {arch} x {shape_name} x {mesh_label(mesh)} ===", flush=True)
+                try:
+                    rec, compiled = lower_cell(arch, shape_name, mesh)
+                    rl = rec["roofline"]
+                    print(
+                        f"    ok in {rec['compile_s']}s  bottleneck={rl['bottleneck']} "
+                        f"t=({rl['t_compute_s']:.2e},{rl['t_memory_s']:.2e},"
+                        f"{rl['t_collective_s']:.2e})s  frac={rl['roofline_fraction']:.3f}",
+                        flush=True,
+                    )
+                    del compiled
+                except Exception as e:
+                    rec = {
+                        "arch": arch, "shape": shape_name, "mesh": mesh_label(mesh),
+                        "ok": False, "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-2000:],
+                    }
+                    print(f"    FAIL: {rec['error']}", flush=True)
+                results = [r for r in results if (r["arch"], r["shape"], r["mesh"]) != key]
+                results.append(rec)
+                with open(out_path, "w") as f:
+                    json.dump(results, f, indent=1)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--no-resume", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    archs = sorted(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    results = run_cells(archs, shapes, meshes, args.out, resume=not args.no_resume)
+    n_ok = sum(1 for r in results if r.get("ok"))
+    print(f"\n{n_ok}/{len(results)} cells OK -> {args.out}")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimb driver (EXPERIMENTS.md §Perf).
+
+Runs named variants of the three hillclimb cells, appending
+hypothesis -> change -> before/after records to results/perf.json.
+
+    PYTHONPATH=src python -m repro.launch.perf --cell A --variant sort_dispatch
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+
+from repro.launch.dryrun import lower_cell  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+CELLS = {
+    "A": ("qwen3-moe-235b-a22b", "train_4k"),
+    "B": ("qwen3-8b", "train_4k"),
+    "C": ("jamba-v0.1-52b", "train_4k"),
+}
+
+
+def _moe_dispatch(mode):
+    def override(cfg):
+        if cfg.moe is None:
+            return cfg
+        return dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, dispatch=mode))
+    return override
+
+
+def _moe_groups(n):
+    def override(cfg):
+        if cfg.moe is None:
+            return cfg
+        return dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch="sort", n_dispatch_groups=n)
+        )
+    return override
+
+
+def _bf16_scores(cfg):
+    return dataclasses.replace(cfg, attn_score_dtype="bfloat16")
+
+
+def _sort_bf16(cfg):
+    return _bf16_scores(_moe_dispatch("sort")(cfg))
+
+
+# variant -> (kwargs for lower_cell, description)
+VARIANTS = {
+    "baseline": (dict(cfg_override=_moe_dispatch("scatter")), "baseline (scatter MoE, accum=4)"),
+    "sort_dispatch": (dict(cfg_override=_moe_dispatch("sort")),
+                      "sort-based MoE dispatch (no scatter replication)"),
+    "sort_accum1": (dict(cfg_override=_moe_dispatch("sort"), accum=1),
+                    "sort dispatch + no grad accumulation (1 weight gather/step)"),
+    "sort_accum2": (dict(cfg_override=_moe_dispatch("sort"), accum=2),
+                    "sort dispatch + accum=2"),
+    "sort_groups64": (dict(cfg_override=_moe_groups(64), accum=4),
+                      "sort dispatch + 64 dispatch groups (smaller sorts)"),
+    "accum1": (dict(accum=1), "no grad accumulation (1 weight gather/step)"),
+    "accum2": (dict(accum=2), "accum=2"),
+    "no_remat": (dict(remat=False), "no per-group remat (memory for compute)"),
+    "no_remat_accum1": (dict(remat=False, accum=1), "no remat + accum=1"),
+    "bf16_scores": (dict(cfg_override=_bf16_scores),
+                    "bf16 attention score/probability buffers (fp32 stats)"),
+    "bf16_scores_accum2": (dict(cfg_override=_bf16_scores, accum=2),
+                           "bf16 scores + accum=2 (fewer FSDP regathers)"),
+    "sort_accum8": (dict(cfg_override=_moe_dispatch("sort"), accum=8),
+                    "sort dispatch + accum=8 (smaller MoE buffers/activations)"),
+    "sort_bf16_scores": (dict(cfg_override=_sort_bf16),
+                         "sort dispatch + bf16 attention scores"),
+}
+
+
+def run(cell: str, variant: str, out="results/perf.json", mesh_kind="single"):
+    arch, shape = CELLS[cell]
+    kw, desc = VARIANTS[variant]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec, compiled = lower_cell(arch, shape, mesh, **kw)
+    rl = rec["roofline"]
+    entry = {
+        "cell": cell, "arch": arch, "shape": shape, "variant": variant, "desc": desc,
+        "t_compute_s": rl["t_compute_s"], "t_memory_s": rl["t_memory_s"],
+        "t_collective_s": rl["t_collective_s"], "bottleneck": rl["bottleneck"],
+        "roofline_fraction": rl["roofline_fraction"], "flops_ratio": rl["flops_ratio"],
+        "temp_gb": (rec["memory"]["temp_bytes"] or 0) / 1e9,
+        "collective_by_kind_gb": {
+            k: v / 1e9 for k, v in rec["hlo"]["collective_by_kind"].items()
+        },
+        "compile_s": rec["compile_s"],
+    }
+    results = []
+    if os.path.exists(out):
+        with open(out) as f:
+            results = json.load(f)
+    results.append(entry)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(json.dumps(entry, indent=1))
+    return entry
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=sorted(CELLS))
+    ap.add_argument("--variant", required=True, choices=sorted(VARIANTS))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--out", default="results/perf.json")
+    a = ap.parse_args()
+    run(a.cell, a.variant, out=a.out, mesh_kind=a.mesh)

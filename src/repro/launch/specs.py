@@ -1,0 +1,112 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+`input_specs` returns weak-type-correct, shardable abstract values — no
+device allocation; the FULL configs are exercised only through lower() /
+compile().  `model_flops` provides the analytic 6*N_active*D (+ attention)
+terms the roofline compares against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES
+from repro.models.config import ModelConfig
+from repro.models import transformer as T
+from repro.parallel.sharding import ShardingRules, batch_pspecs, tree_pspecs
+from repro.training.optimizer import OptConfig, init_opt_state
+from repro.training.train_step import TrainState
+
+
+def opt_config_for(cfg: ModelConfig) -> OptConfig:
+    """bf16 moments for the >100B archs keep optimizer state in HBM budget."""
+    mdt = "bfloat16" if cfg.n_params > 1e11 else "float32"
+    return OptConfig(moment_dtype=mdt)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """Abstract input batch for a cell."""
+    sh = SHAPES[shape_name]
+    B, S = sh.global_batch, sh.seq_len
+    i32 = jnp.int32
+    if sh.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B,), i32)}
+    batch = {}
+    if cfg.input_mode == "frames":
+        batch["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.float32)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.input_mode == "tokens+patches":
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.d_model), jnp.float32
+            )
+    if sh.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    return batch
+
+
+def abstract_train_state(model, opt_cfg: OptConfig):
+    """TrainState of ShapeDtypeStructs via eval_shape (no allocation)."""
+    def make():
+        params = model.init(jax.random.key(0))
+        return TrainState(
+            params=params, opt=init_opt_state(params, opt_cfg),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    return jax.eval_shape(make)
+
+
+def abstract_caches(model, shape_name: str):
+    sh = SHAPES[shape_name]
+    return jax.eval_shape(
+        lambda: model.init_caches(batch_size=sh.global_batch, max_len=sh.seq_len)
+    )
+
+
+def train_state_pspecs(model, rules: ShardingRules):
+    params = tree_pspecs(model.param_specs(), rules)
+    return TrainState(
+        params=params,
+        opt={k: params for k in ("m", "v")},
+        step=jax.sharding.PartitionSpec(),
+    )
+
+
+def cache_pspecs(model, rules: ShardingRules):
+    return tree_pspecs(model.cache_specs(), rules)
+
+
+def batch_specs_for(cfg: ModelConfig, shape_name: str, rules: ShardingRules):
+    return batch_pspecs(cfg, rules, kind=SHAPES[shape_name].kind)
+
+
+# ---------------------------------------------------------------------------
+# Analytic model FLOPs (per device) for the roofline's "useful compute".
+# ---------------------------------------------------------------------------
+
+def _attn_layers(cfg: ModelConfig) -> int:
+    per = sum(1 for s in cfg.pattern if s.mixer.startswith("attn"))
+    return per * cfg.n_groups
+
+
+def model_flops(cfg: ModelConfig, shape_name: str, n_devices: int) -> float:
+    sh = SHAPES[shape_name]
+    B, S = sh.global_batch, sh.seq_len
+    Na = cfg.n_active_params
+    Hhd = cfg.n_heads * cfg.head_dim
+    La = _attn_layers(cfg)
+    if sh.kind == "train":
+        tokens = B * S
+        mm = 6.0 * Na * tokens
+        attn = 3 * (4.0 * B * S * S / 2 * Hhd) * La  # fwd 2BS^2/2*(qk+pv), bwd 2x
+    elif sh.kind == "prefill":
+        tokens = B * S
+        mm = 2.0 * Na * tokens
+        attn = 4.0 * B * S * S / 2 * Hhd * La
+    else:  # decode: one token against an S-long cache
+        tokens = B
+        mm = 2.0 * Na * tokens
+        attn = 4.0 * B * S * Hhd * La
+    return (mm + attn) / n_devices

@@ -1,0 +1,67 @@
+"""Training driver (example scale on CPU; production mesh on TPU).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --reduced \
+        --steps 100 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config, reduced
+from repro.data.pipeline import DataConfig
+from repro.models.model_zoo import build_model
+from repro.parallel.sharding import activation_sharding_ctx, make_rules
+from repro.runtime.loop import RunConfig, run_training
+from repro.training.optimizer import OptConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", help="CPU-sized config")
+    ap.add_argument("--groups", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--compress-bits", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg, groups=args.groups)
+    model = build_model(cfg)
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch)
+    opt_cfg = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1))
+    run_cfg = RunConfig(total_steps=args.steps, ckpt_every=args.ckpt_every)
+    ckpt = Checkpointer(args.ckpt_dir)
+
+    n_dev = len(jax.devices())
+    if n_dev > 1:
+        mesh = jax.make_mesh((n_dev, 1), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        rules = make_rules(mesh, model_cfg=cfg)
+        with jax.set_mesh(mesh), activation_sharding_ctx(mesh, rules):
+            out = run_training(model, data_cfg, opt_cfg, run_cfg, ckpt,
+                               train_step_kw={"accum": args.accum,
+                                              "compress_bits": args.compress_bits or None})
+    else:
+        out = run_training(model, data_cfg, opt_cfg, run_cfg, ckpt,
+                           train_step_kw={"accum": args.accum,
+                                          "compress_bits": args.compress_bits or None})
+    final = out["metrics"][-1] if out["metrics"] else {}
+    print(f"done: steps={final.get('step')} loss={final.get('loss'):.4f} "
+          f"restarts={out['restarts']} straggler_alarms={out['straggler_alarms']}")
+
+
+if __name__ == "__main__":
+    main()

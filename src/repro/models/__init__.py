@@ -1,0 +1,6 @@
+"""Assigned LM architectures: dense / MoE / hybrid / SSM / encoder / VLM."""
+
+from repro.models.config import ModelConfig, MoEConfig, MambaConfig, LayerSpec
+from repro.models.model_zoo import build_model
+
+__all__ = ["ModelConfig", "MoEConfig", "MambaConfig", "LayerSpec", "build_model"]

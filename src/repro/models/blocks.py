@@ -1,0 +1,50 @@
+"""Per-group parameter construction for the repeating (mixer, ffn) pattern.
+
+The forward passes over groups live in repro.models.transformer (train /
+prefill / decode each need different aux outputs); this module owns the
+parameter structure and its PartitionSpec templates.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models.layers.attention import attn_specs, init_attn
+from repro.models.layers.mamba import init_mamba, mamba_specs
+from repro.models.layers.mlp import init_mlp, mlp_specs
+from repro.models.layers.moe import init_moe, moe_specs
+from repro.models.layers.norms import init_rms, rms_specs
+
+
+def init_group(key, cfg, dtype) -> dict:
+    """Parameters for one pattern group (dict keyed by position index)."""
+    p = {}
+    for i, spec in enumerate(cfg.pattern):
+        k1, k2, k3, k4 = jax.random.split(jax.random.fold_in(key, i), 4)
+        lp = {"norm_mixer": init_rms(cfg.d_model, dtype), "norm_ffn": init_rms(cfg.d_model, dtype)}
+        if spec.mixer.startswith("attn"):
+            lp["attn"] = init_attn(k1, cfg, dtype)
+        elif spec.mixer == "mamba":
+            lp["mamba"] = init_mamba(k2, cfg, dtype)
+        if spec.ffn == "mlp":
+            lp["mlp"] = init_mlp(k3, cfg, dtype)
+        elif spec.ffn == "moe":
+            lp["moe"] = init_moe(k4, cfg, dtype)
+        p[f"pos{i}"] = lp
+    return p
+
+
+def group_specs(cfg) -> dict:
+    p = {}
+    for i, spec in enumerate(cfg.pattern):
+        lp = {"norm_mixer": rms_specs(), "norm_ffn": rms_specs()}
+        if spec.mixer.startswith("attn"):
+            lp["attn"] = attn_specs(cfg)
+        elif spec.mixer == "mamba":
+            lp["mamba"] = mamba_specs(cfg)
+        if spec.ffn == "mlp":
+            lp["mlp"] = mlp_specs(cfg)
+        elif spec.ffn == "moe":
+            lp["moe"] = moe_specs(cfg)
+        p[f"pos{i}"] = lp
+    return p

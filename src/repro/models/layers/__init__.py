@@ -1,0 +1,2 @@
+"""Layer library.  Every layer exposes `init(key, cfg) -> params`,
+`specs(cfg) -> PartitionSpec-template tree`, and a forward function."""

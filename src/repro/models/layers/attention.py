@@ -1,0 +1,184 @@
+"""GQA attention: blocked (flash-style) forward for train/prefill, and a
+cache-reading decode step.  Supports RoPE, qk-norm, logit soft-capping, and
+sliding-window masking.
+
+The blocked forward scans over KV chunks with online-softmax accumulators so
+the [S, S] score matrix is never materialized — the pure-jnp analogue of the
+Pallas flash kernel in repro.kernels.flash_attention (which is the TPU-target
+implementation; this one is its oracle and the XLA fallback path).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.norms import rms_norm
+from repro.models.layers.rope import apply_rope
+from repro.parallel.sharding import shard_activation
+
+NEG_INF = -1e30
+
+
+def init_attn(key, cfg, dtype) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d**-0.5
+    p = {
+        "wq": (jax.random.normal(k1, (d, H, hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, KV, hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, KV, hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (H, hd, d)) * (H * hd) ** -0.5).astype(dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def attn_specs(cfg) -> dict:
+    p = {
+        "wq": ("fsdp", "tp", None),
+        "wk": ("fsdp", "kv", None),  # "kv" -> model axis iff n_kv divides it
+        "wv": ("fsdp", "kv", None),
+        "wo": ("tp", None, "fsdp"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = (None,)
+        p["k_norm"] = (None,)
+    return p
+
+
+def _qkv(params, cfg, x, positions):
+    """x [B,S,d] -> q [B,S,H,hd], k/v [B,S,KV,hd] with RoPE + optional qk-norm."""
+    q = shard_activation(jnp.einsum("bsd,dnh->bsnh", x, params["wq"]),
+                         "dp", None, "tp", None)
+    k = shard_activation(jnp.einsum("bsd,dnh->bsnh", x, params["wk"]),
+                         "dp", None, "kv", None)
+    v = shard_activation(jnp.einsum("bsd,dnh->bsnh", x, params["wv"]),
+                         "dp", None, "kv", None)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask_bias(q_pos, kv_pos, causal: bool, window: int | None):
+    """[S_q, S_kv] additive mask in fp32."""
+    ok = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        ok &= kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= kv_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _softcap(scores, cap):
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def blocked_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
+                      softcap=None, chunk=1024, score_dtype=jnp.float32):
+    """Online-softmax attention over KV chunks.
+
+    q [B,Sq,H,hd]; k,v [B,Skv,KV,hd] (GQA: H % KV == 0).  Returns [B,Sq,H,hd].
+    score_dtype: dtype of the materialized per-chunk score/probability
+    buffers (the XLA-path memory hot spot; the Pallas flash kernel keeps
+    them in VMEM tiles instead).  Max/sum statistics stay fp32.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    chunk = min(chunk, Skv)
+    n_chunks = Skv // chunk
+    assert Skv % chunk == 0, "kv length must be divisible by chunk"
+    scale = hd**-0.5
+
+    qg = shard_activation(q.reshape(B, Sq, KV, G, hd), "dp", None, "kv", None, None)
+    kc = shard_activation(k.reshape(B, n_chunks, chunk, KV, hd),
+                          "dp", None, None, "kv", None)
+    vc = shard_activation(v.reshape(B, n_chunks, chunk, KV, hd),
+                          "dp", None, None, "kv", None)
+    posc = kv_pos.reshape(n_chunks, chunk)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, pb = inp  # [B,chunk,KV,hd] x2, [chunk]
+        s = jnp.einsum("bqkgh,bckh->bqkgc", qg, kb).astype(score_dtype) * scale
+        s = _softcap(s, softcap)
+        s = s + _mask_bias(q_pos, pb, causal, window)[None, :, None, None, :].astype(
+            score_dtype
+        )
+        m_new = jnp.maximum(m, s.max(-1).astype(jnp.float32))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None].astype(score_dtype))
+        l_new = l * alpha + p.sum(-1).astype(jnp.float32)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqkgc,bckh->bqkgh", p.astype(vb.dtype), vb
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = shard_activation(jnp.full((B, Sq, KV, G), NEG_INF, jnp.float32),
+                          "dp", None, "kv", None)
+    l0 = shard_activation(jnp.zeros((B, Sq, KV, G), jnp.float32), "dp", None, "kv", None)
+    acc0 = shard_activation(jnp.zeros((B, Sq, KV, G, hd), jnp.float32),
+                            "dp", None, "kv", None, None)
+    (m, l, acc), _ = jax.lax.scan(
+        body,
+        (m0, l0, acc0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), posc),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attention_forward(params, cfg, x, positions, *, local: bool = False, chunk=1024):
+    """Full-sequence attention (training / prefill). x: [B,S,d]."""
+    q, k, v = _qkv(params, cfg, x, positions)
+    pos1d = positions if positions.ndim == 1 else positions[0]
+    out = blocked_attention(
+        q, k, v, pos1d, pos1d,
+        causal=cfg.causal,
+        window=cfg.window if local else None,
+        softcap=cfg.attn_softcap,
+        chunk=chunk,
+        score_dtype=jnp.dtype(cfg.attn_score_dtype),
+    )
+    out = shard_activation(out, "dp", None, "tp", None)
+    proj = shard_activation(
+        jnp.einsum("bsnh,nhd->bsd", out, params["wo"]), "dp", None, None
+    )
+    return proj, (k, v)
+
+
+def decode_attention(params, cfg, x, cache_k, cache_v, position, *, local: bool = False):
+    """One-token decode against a KV cache.
+
+    x [B,1,d]; cache_k/v [B,S_max,KV,hd]; position: scalar index of the new
+    token.  Returns (out [B,1,d], new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    S_max, KV, hd = cache_k.shape[1], cache_k.shape[2], cache_k.shape[3]
+    H = cfg.n_heads
+    G = H // KV
+    pos = jnp.full((B, 1), position, jnp.int32)
+    q, k, v = _qkv(params, cfg, x, pos)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, position, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, position, 0, 0))
+
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, cache_k).astype(jnp.float32) * hd**-0.5
+    s = _softcap(s, cfg.attn_softcap)
+    kv_pos = jnp.arange(S_max)
+    ok = kv_pos[None, None, None, :] <= position
+    if local and cfg.window is not None:
+        ok &= kv_pos[None, None, None, :] > (position - cfg.window)
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p.astype(cache_v.dtype), cache_v)
+    out = out.reshape(B, 1, H, hd)
+    return jnp.einsum("bsnh,nhd->bsd", out, params["wo"]), cache_k, cache_v

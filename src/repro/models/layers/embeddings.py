@@ -1,0 +1,54 @@
+"""Token embedding + logit head (tied or untied), with modality stubs.
+
+`[audio]` (hubert) and `[vlm]` (internvl2) architectures specify the
+transformer backbone only — per the assignment, the modality frontend is a
+stub: `input_specs()` feeds precomputed frame/patch embeddings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard_activation
+
+
+def init_embeddings(key, cfg, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"embed": (jax.random.normal(k1, (cfg.vocab, cfg.d_model)) * 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = (jax.random.normal(k2, (cfg.d_model, cfg.vocab))
+                     * cfg.d_model**-0.5).astype(dtype)
+    return p
+
+
+def embed_specs(cfg) -> dict:
+    p = {"embed": ("tp", "fsdp")}
+    if not cfg.tie_embeddings:
+        p["head"] = ("fsdp", "tp")
+    return p
+
+
+def embed_inputs(params, cfg, batch) -> jax.Array:
+    """batch -> [B, S, d] per cfg.input_mode."""
+    if cfg.input_mode == "frames":
+        # audio stub: precomputed frame embeddings, already d_model-sized
+        x = batch["frames"].astype(params["embed"].dtype)
+        return shard_activation(x, "dp", None, None)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.input_mode == "tokens+patches":
+        # vlm stub: patch embeddings replace the first n_patches positions
+        pe = batch["patch_embeds"].astype(x.dtype)
+        x = jnp.concatenate([pe, x[:, pe.shape[1]:, :]], axis=1)
+    return shard_activation(x, "dp", None, None)
+
+
+def logits_out(params, cfg, x) -> jax.Array:
+    """x [B,S,d] -> [B,S,V] (bf16-safe; final softcap for gemma2)."""
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    if logits.ndim == 3:
+        logits = shard_activation(logits, "dp", None, "tp")
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits

@@ -1,0 +1,145 @@
+"""Mamba-1 block (selective SSM) for falcon-mamba and jamba.
+
+Train/prefill uses a *chunked* selective scan: within a chunk of Q timesteps
+the recurrence h_t = a_t * h_{t-1} + b_t is evaluated with an associative
+scan, chunks are stitched sequentially — O(S) memory in chunk-sized pieces.
+This is the jnp oracle of the Pallas `mamba_scan` kernel.  Decode carries the
+[B, d_inner, N] state explicitly (O(1) per token — why SSMs run long_500k).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard_activation
+
+
+def init_mamba(key, cfg, dtype) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    N, dconv, r = cfg.mamba.d_state, cfg.mamba.d_conv, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2, di)) * d**-0.5).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (dconv, di)) * dconv**-0.5).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": (jax.random.normal(ks[2], (di, r + 2 * N)) * di**-0.5).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (r, di)) * r**-0.5).astype(dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[5], (di, d)) * di**-0.5).astype(dtype),
+    }
+
+
+def mamba_specs(cfg) -> dict:
+    return {
+        "in_proj": ("fsdp", None, "tp"),
+        "conv_w": (None, "tp"),
+        "conv_b": ("tp",),
+        "x_proj": ("tp", None),
+        "dt_proj": (None, "tp"),
+        "dt_bias": ("tp",),
+        "A_log": ("tp", None),
+        "D": ("tp",),
+        "out_proj": ("tp", "fsdp"),
+    }
+
+
+def _ssm_inputs(params, cfg, xc):
+    """Shared pre-scan computation.  xc [B,S,di] (post-conv, post-silu).
+
+    Returns a [B,S,di,N] decay, b [B,S,di,N] drive, C [B,S,N]."""
+    N, r = cfg.mamba.d_state, cfg.dt_rank
+    dbl = jnp.einsum("bsi,ir->bsr", xc, params["x_proj"])
+    dt, Bc, Cc = jnp.split(dbl, [r, r + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt, params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )  # [B,S,di]
+    A = -jnp.exp(params["A_log"])  # [di,N]
+    a = jnp.exp(dt[..., None] * A[None, None])  # [B,S,di,N]
+    b = (dt * xc.astype(jnp.float32))[..., None] * Bc[:, :, None, :].astype(jnp.float32)
+    return a, b, Cc
+
+
+def _causal_conv(params, cfg, x1, conv_state=None):
+    """Depthwise causal conv1d.  x1 [B,S,di]; conv_state [B,dconv-1,di] or None."""
+    dconv = cfg.mamba.d_conv
+    if conv_state is None:
+        pad = jnp.zeros((x1.shape[0], dconv - 1, x1.shape[2]), x1.dtype)
+    else:
+        pad = conv_state.astype(x1.dtype)
+    xp = jnp.concatenate([pad, x1], axis=1)  # [B, S+dconv-1, di]
+    out = sum(
+        xp[:, i : i + x1.shape[1], :] * params["conv_w"][i][None, None, :]
+        for i in range(dconv)
+    )
+    new_state = xp[:, -(dconv - 1):, :] if dconv > 1 else pad
+    return out + params["conv_b"][None, None, :], new_state
+
+
+def mamba_forward(params, cfg, x, return_state: bool = False):
+    """x [B,S,d] -> [B,S,d].  Chunked selective scan, h0 = 0.
+
+    With return_state=True also returns (ssm_state, conv_state) after the
+    last step, for prefill -> decode handoff."""
+    B, S, d = x.shape
+    di, N = cfg.d_inner, cfg.mamba.d_state
+    Q = min(cfg.mamba.chunk, S)
+    while S % Q:
+        Q //= 2
+    xz = shard_activation(jnp.einsum("bsd,dgi->bsgi", x, params["in_proj"]),
+                          "dp", None, None, "tp")
+    x1, z = xz[:, :, 0, :], xz[:, :, 1, :]
+    xc, _ = _causal_conv(params, cfg, x1)
+    xc = jax.nn.silu(xc)
+    a, b, Cc = _ssm_inputs(params, cfg, xc)
+    a = shard_activation(a, "dp", None, "tp", None)
+    b = shard_activation(b, "dp", None, "tp", None)
+
+    # chunked associative scan over S
+    nch = S // Q
+    a_c = a.reshape(B, nch, Q, di, N)
+    b_c = b.reshape(B, nch, Q, di, N)
+
+    def chunk_step(h0, inp):
+        ac, bc = inp  # [B,Q,di,N]
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+        a_cum, b_cum = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h = a_cum * h0[:, None] + b_cum  # [B,Q,di,N]
+        return h[:, -1], h
+
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    _, hs = jax.lax.scan(chunk_step, h0, (jnp.moveaxis(a_c, 1, 0), jnp.moveaxis(b_c, 1, 0)))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, di, N)
+    y = jnp.einsum("bsin,bsn->bsi", h, Cc.astype(jnp.float32))
+    y = y + params["D"][None, None] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = shard_activation(jnp.einsum("bsi,id->bsd", y, params["out_proj"]),
+                           "dp", None, None)
+    if return_state:
+        dconv = cfg.mamba.d_conv
+        conv_state = x1[:, -(dconv - 1):, :] if S >= dconv - 1 else jnp.pad(
+            x1, ((0, 0), (dconv - 1 - S, 0), (0, 0))
+        )
+        return out, (h[:, -1], conv_state)
+    return out
+
+
+def mamba_decode(params, cfg, x, ssm_state, conv_state):
+    """One-token step.  x [B,1,d]; ssm_state [B,di,N]; conv_state [B,dconv-1,di]."""
+    xz = jnp.einsum("bsd,dgi->bsgi", x, params["in_proj"])
+    x1, z = xz[:, :, 0, :], xz[:, :, 1, :]
+    xc, new_conv = _causal_conv(params, cfg, x1, conv_state)
+    xc = jax.nn.silu(xc)
+    a, b, Cc = _ssm_inputs(params, cfg, xc)  # S = 1
+    h = a[:, 0] * ssm_state + b[:, 0]  # [B,di,N]
+    y = jnp.einsum("bin,bn->bi", h, Cc[:, 0].astype(jnp.float32))
+    y = y + params["D"][None] * xc[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bi,id->bd", y, params["out_proj"])[:, None, :]
+    return out, h, new_conv

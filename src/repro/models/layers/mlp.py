@@ -1,0 +1,39 @@
+"""Gated MLP (SwiGLU / GeGLU)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard_activation
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def init_mlp(key, cfg, dtype, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    g = 2 if cfg.mlp_gated else 1
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": (jax.random.normal(k1, (d, g, ff)) * d**-0.5).astype(dtype),
+        "w_out": (jax.random.normal(k2, (ff, d)) * ff**-0.5).astype(dtype),
+    }
+
+
+def mlp_specs(cfg) -> dict:
+    return {"w_in": ("fsdp", None, "tp"), "w_out": ("tp", "fsdp")}
+
+
+def mlp_forward(params, cfg, x):
+    """x [B,S,d] -> [B,S,d]; fused gate+up projection (or plain 2-matrix MLP)."""
+    gu = shard_activation(jnp.einsum("bsd,dgf->bsgf", x, params["w_in"]),
+                          "dp", None, None, "tp")
+    if cfg.mlp_gated:
+        h = _act(cfg.act)(gu[:, :, 0, :]) * gu[:, :, 1, :]
+    else:
+        h = _act(cfg.act)(gu[:, :, 0, :])
+    return shard_activation(jnp.einsum("bsf,fd->bsd", h, params["w_out"]),
+                            "dp", None, None)

@@ -1,0 +1,20 @@
+"""RMSNorm (fp32 statistics, cast back to input dtype)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jnp.reciprocal(jnp.sqrt(var + eps))
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def init_rms(d: int, dtype) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rms_specs() -> dict:
+    return {"scale": (None,)}

@@ -1,0 +1,42 @@
+"""Build a model bundle from a ModelConfig."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    forward: Callable[..., Any]
+    loss_fn: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    prefill: Callable[..., Any]
+    init_caches: Callable[..., Any]
+    param_specs: Callable[[], Any]
+    cache_specs: Callable[[], Any]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=lambda key: T.init_params(key, cfg),
+        forward=lambda params, batch, **kw: T.forward(params, cfg, batch, **kw),
+        loss_fn=lambda params, batch, **kw: T.loss_fn(params, cfg, batch, **kw),
+        decode_step=lambda params, caches, tokens, position: T.decode_step(
+            params, caches, cfg, tokens, position
+        ),
+        prefill=lambda params, batch, max_len, **kw: T.prefill(
+            params, cfg, batch, max_len, **kw
+        ),
+        init_caches=lambda batch_size, max_len, **kw: T.init_caches(
+            cfg, batch_size, max_len, **kw
+        ),
+        param_specs=lambda: T.param_specs(cfg),
+        cache_specs=lambda: T.cache_specs(cfg),
+    )

@@ -1,0 +1,229 @@
+"""Model facade: init / train forward / prefill / decode over the group stack.
+
+Decode state layout (pytree of stacked-over-group arrays):
+    caches["pos{i}"] = {"k": [G,B,Smax,KV,hd], "v": ...}        attention mixers
+                     = {"ssm": [G,B,di,N], "conv": [G,B,dc-1,di]}  mamba mixers
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import group_specs, init_group
+from repro.models.layers.attention import attention_forward, decode_attention
+from repro.models.layers.embeddings import embed_inputs, embed_specs, init_embeddings, logits_out
+from repro.models.layers.mamba import mamba_decode, mamba_forward
+from repro.models.layers.mlp import mlp_forward
+from repro.models.layers.moe import moe_forward
+from repro.models.layers.norms import init_rms, rms_norm, rms_specs
+from repro.parallel.sharding import shard_activation
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def init_params(key, cfg) -> dict:
+    ke, kb = jax.random.split(key)
+    dtype = _dtype(cfg)
+    gkeys = jax.random.split(kb, cfg.n_groups)
+    blocks = jax.vmap(lambda k: init_group(k, cfg, dtype))(gkeys)
+    return {
+        **init_embeddings(ke, cfg, dtype),
+        "blocks": blocks,
+        "final_norm": init_rms(cfg.d_model, dtype),
+    }
+
+
+def param_specs(cfg) -> dict:
+    blocks = jax.tree.map(
+        lambda spec: (None, *spec),
+        group_specs(cfg),
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+    return {**embed_specs(cfg), "blocks": blocks, "final_norm": rms_specs()}
+
+
+# ---------------------------------------------------------------------------
+# Training / scoring forward.
+# ---------------------------------------------------------------------------
+
+def _group_fwd(gparams, cfg, x, positions, chunk):
+    x = shard_activation(x, "dp", None, None)
+    for i, spec in enumerate(cfg.pattern):
+        lp = gparams[f"pos{i}"]
+        h = rms_norm(x, lp["norm_mixer"]["scale"], cfg.norm_eps)
+        if spec.mixer.startswith("attn"):
+            out, _ = attention_forward(
+                lp["attn"], cfg, h, positions,
+                local=(spec.mixer == "attn_local"), chunk=chunk,
+            )
+        elif spec.mixer == "mamba":
+            out = mamba_forward(lp["mamba"], cfg, h)
+        else:
+            out = jnp.zeros_like(h)
+        x = x + out
+        if spec.ffn != "none":
+            h = rms_norm(x, lp["norm_ffn"]["scale"], cfg.norm_eps)
+            out = mlp_forward(lp["mlp"], cfg, h) if spec.ffn == "mlp" else moe_forward(
+                lp["moe"], cfg, h
+            )
+            x = x + out
+    return x
+
+
+def forward(params, cfg, batch, *, remat: bool = True, chunk: int = 1024):
+    """batch -> logits [B,S,V]."""
+    x = embed_inputs(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+
+    body = functools.partial(_group_fwd, cfg=cfg, positions=positions, chunk=chunk)
+    fn = jax.checkpoint(lambda g, c: body(g, x=c)) if remat else (lambda g, c: body(g, x=c))
+
+    def scan_body(carry, gparams):
+        return fn(gparams, carry), None
+
+    x, _ = jax.lax.scan(scan_body, x, params["blocks"])
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return logits_out(params, cfg, x)
+
+
+def loss_fn(params, cfg, batch, **kw) -> jax.Array:
+    """Mean next-token (or frame-label) cross entropy."""
+    logits = forward(params, cfg, batch, **kw).astype(jnp.float32)
+    labels = batch["labels"]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+    return jnp.sum((lse - picked) * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode.
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg, batch_size: int, max_len: int, dtype=None) -> dict:
+    dtype = dtype or _dtype(cfg)
+    G = cfg.n_groups
+    caches = {}
+    for i, spec in enumerate(cfg.pattern):
+        if spec.mixer.startswith("attn"):
+            shape = (G, batch_size, max_len, cfg.n_kv, cfg.head_dim)
+            caches[f"pos{i}"] = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        elif spec.mixer == "mamba":
+            di, N, dc = cfg.d_inner, cfg.mamba.d_state, cfg.mamba.d_conv
+            caches[f"pos{i}"] = {
+                "ssm": jnp.zeros((G, batch_size, di, N), jnp.float32),
+                "conv": jnp.zeros((G, batch_size, dc - 1, di), dtype),
+            }
+    return caches
+
+
+def cache_specs(cfg) -> dict:
+    """PartitionSpec templates for the decode caches (seq sharded for SP)."""
+    specs = {}
+    for i, spec in enumerate(cfg.pattern):
+        if spec.mixer.startswith("attn"):
+            t = (None, "dp", "sp", None, None)
+            specs[f"pos{i}"] = {"k": t, "v": t}
+        elif spec.mixer == "mamba":
+            specs[f"pos{i}"] = {
+                "ssm": (None, "dp", "tp", None),
+                "conv": (None, "dp", None, "tp"),
+            }
+    return specs
+
+
+def _group_decode(gparams, caches_g, cfg, x, position):
+    """One group, one token.  caches_g leaves have no leading G dim here."""
+    new_caches = {}
+    for i, spec in enumerate(cfg.pattern):
+        lp = gparams[f"pos{i}"]
+        key = f"pos{i}"
+        h = rms_norm(x, lp["norm_mixer"]["scale"], cfg.norm_eps)
+        if spec.mixer.startswith("attn"):
+            out, ck, cv = decode_attention(
+                lp["attn"], cfg, h, caches_g[key]["k"], caches_g[key]["v"], position,
+                local=(spec.mixer == "attn_local"),
+            )
+            new_caches[key] = {"k": ck, "v": cv}
+        elif spec.mixer == "mamba":
+            out, ssm, conv = mamba_decode(
+                lp["mamba"], cfg, h, caches_g[key]["ssm"], caches_g[key]["conv"]
+            )
+            new_caches[key] = {"ssm": ssm, "conv": conv}
+        else:
+            out = jnp.zeros_like(h)
+            new_caches[key] = caches_g[key]
+        x = x + out
+        if spec.ffn != "none":
+            h = rms_norm(x, lp["norm_ffn"]["scale"], cfg.norm_eps)
+            out = mlp_forward(lp["mlp"], cfg, h) if spec.ffn == "mlp" else moe_forward(
+                lp["moe"], cfg, h
+            )
+            x = x + out
+    return x, new_caches
+
+
+def decode_step(params, caches, cfg, tokens, position):
+    """tokens [B] int32, position scalar -> (logits [B,V], new caches)."""
+    x = jnp.take(params["embed"], tokens[:, None], axis=0)
+
+    def scan_body(carry, inp):
+        gparams, caches_g = inp
+        out, new_c = _group_decode(gparams, caches_g, cfg, carry, position)
+        return out, new_c
+
+    x, new_caches = jax.lax.scan(scan_body, x, (params["blocks"], caches))
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return logits_out(params, cfg, x)[:, 0, :], new_caches
+
+
+def prefill(params, cfg, batch, max_len: int, *, chunk: int = 1024):
+    """Run the prompt, returning (last-position logits, filled caches).
+
+    The attention caches are written for positions [0, S); mamba states carry
+    the final recurrent state.
+    """
+    x = embed_inputs(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    dtype = _dtype(cfg)
+
+    def group_prefill(x, gparams):
+        caches_g = {}
+        for i, spec in enumerate(cfg.pattern):
+            lp = gparams[f"pos{i}"]
+            h = rms_norm(x, lp["norm_mixer"]["scale"], cfg.norm_eps)
+            if spec.mixer.startswith("attn"):
+                out, (k, v) = attention_forward(
+                    lp["attn"], cfg, h, positions,
+                    local=(spec.mixer == "attn_local"), chunk=chunk,
+                )
+                pad = [(0, 0), (0, max_len - S), (0, 0), (0, 0)]
+                caches_g[f"pos{i}"] = {
+                    "k": jnp.pad(k.astype(dtype), pad),
+                    "v": jnp.pad(v.astype(dtype), pad),
+                }
+            elif spec.mixer == "mamba":
+                out, (ssm, conv) = mamba_forward(lp["mamba"], cfg, h, return_state=True)
+                caches_g[f"pos{i}"] = {"ssm": ssm, "conv": conv.astype(dtype)}
+            else:
+                out = jnp.zeros_like(h)
+                caches_g[f"pos{i}"] = {}
+            x = x + out
+            if spec.ffn != "none":
+                h = rms_norm(x, lp["norm_ffn"]["scale"], cfg.norm_eps)
+                out = mlp_forward(lp["mlp"], cfg, h) if spec.ffn == "mlp" else moe_forward(
+                    lp["moe"], cfg, h
+                )
+                x = x + out
+        return x, caches_g
+
+    x, caches = jax.lax.scan(group_prefill, x, params["blocks"])
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return logits_out(params, cfg, x[:, -1:, :])[:, 0, :], caches

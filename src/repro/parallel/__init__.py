@@ -1,0 +1,17 @@
+"""Distribution: mesh axes, logical-axis sharding rules, collectives."""
+
+from repro.parallel.sharding import (
+    ShardingRules,
+    make_rules,
+    template_to_pspec,
+    tree_shardings,
+    batch_pspecs,
+)
+
+__all__ = [
+    "ShardingRules",
+    "make_rules",
+    "template_to_pspec",
+    "tree_shardings",
+    "batch_pspecs",
+]

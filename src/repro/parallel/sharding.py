@@ -1,0 +1,167 @@
+"""Logical-axis sharding rules (Megatron-style TP + FSDP + EP + SP).
+
+Layers annotate parameters with *logical* axis names; this module maps them
+onto the production mesh:
+
+    fsdp -> "data"             weight shards gathered at use (ZeRO-3 style)
+    tp   -> "model"            Megatron tensor parallel (heads / ffn / vocab)
+    ep   -> "model"            MoE expert parallel
+    dp   -> ("pod","data")     batch (pod axis = pure DP across pods)
+    sp   -> "model"            sequence-sharded KV caches (long-context decode)
+
+The 2.5D insight of the paper maps onto this table: replicating weights along
+"data"/"pod" (the c replication layers) defers the gradient reduction exactly
+the way COnfLUX defers Schur-complement reductions across pz.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    rules: dict = field(
+        default_factory=lambda: {
+            None: None,
+            "fsdp": "data",
+            "tp": "model",
+            "ep": "model",
+            "dp": ("data",),
+            "sp": "model",
+        }
+    )
+
+    def axes(self, logical):
+        return self.rules.get(logical, None)
+
+
+def make_rules(mesh: Mesh, *, fsdp: bool = True, pod_strategy: str = "dp",
+               model_cfg=None) -> ShardingRules:
+    """Build rules for a mesh; the pod axis (if present) extends data-parallel.
+
+    The "kv" logical axis (GQA key/value heads) maps to the model axis only
+    when n_kv divides it — otherwise K/V projections replicate across TP
+    ranks (Megatron GQA convention) instead of forcing uneven shards.
+    """
+    has_pod = "pod" in mesh.axis_names
+    dp = ("pod", "data") if (has_pod and pod_strategy == "dp") else ("data",)
+    tp_size = _axis_sizes(mesh).get("model", 1)
+    kv = None
+    if model_cfg is not None and getattr(model_cfg, "n_kv", 0) % max(tp_size, 1) == 0:
+        kv = "model"
+    return ShardingRules(
+        rules={
+            None: None,
+            "fsdp": "data" if fsdp else None,
+            "tp": "model",
+            "ep": "model",
+            "dp": dp,
+            "sp": "model",
+            "kv": kv,
+        }
+    )
+
+
+def template_to_pspec(template: tuple, rules: ShardingRules) -> P:
+    """('fsdp','tp',None) -> PartitionSpec('data','model',None)."""
+    return P(*[rules.axes(t) for t in template])
+
+
+def _axis_sizes(mesh) -> dict:
+    return dict(mesh.shape)  # works for Mesh and AbstractMesh
+
+
+def sanitize_pspec(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop mesh axes from dimensions they do not divide evenly.
+
+    pjit argument shardings require divisibility (llama4's 40 heads on a
+    16-way model axis, hubert's 504-token vocab, batch-1 decode caches);
+    non-divisible dims fall back to replication on that axis.
+    """
+    sizes = _axis_sizes(mesh)
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(entry)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        keep = []
+        prod = 1
+        for ax in axes:
+            if shape[i] % (prod * sizes.get(ax, 1)) == 0:
+                keep.append(ax)
+                prod *= sizes.get(ax, 1)
+        out.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*out)
+
+
+def _is_template(x) -> bool:
+    return isinstance(x, tuple) and all(t is None or isinstance(t, str) for t in x)
+
+
+def tree_pspecs(template_tree, rules: ShardingRules):
+    return jax.tree.map(
+        lambda t: template_to_pspec(t, rules), template_tree, is_leaf=_is_template
+    )
+
+
+def tree_shardings(mesh: Mesh, template_tree, rules: ShardingRules):
+    return jax.tree.map(
+        lambda t: NamedSharding(mesh, template_to_pspec(t, rules)),
+        template_tree,
+        is_leaf=_is_template,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints.  GSPMD's fixpoint inside scanned layer
+# bodies can legally settle on batch-replicated layouts (observed: x sharded
+# only on d_model), so the model inserts explicit constraints at layer
+# boundaries via this context — the jit'd function must be *traced* inside
+# `activation_sharding_ctx`.
+# ---------------------------------------------------------------------------
+
+_ACT_CTX: contextvars.ContextVar = contextvars.ContextVar("repro_act_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding_ctx(mesh: Mesh, rules: ShardingRules):
+    tok = _ACT_CTX.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _ACT_CTX.reset(tok)
+
+
+def shard_activation(x, *logical):
+    """Constrain an activation to logical axes (no-op outside the context).
+    Axes that do not divide the dimension are dropped (replicated)."""
+    ctx = _ACT_CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = sanitize_pspec(P(*[rules.axes(t) for t in logical]), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_pspecs(cfg, rules: ShardingRules, kind: str = "train") -> dict:
+    """PartitionSpecs for the input batch pytree of `input_specs`."""
+    dp = rules.axes("dp")
+    if kind == "decode":
+        return {"tokens": P(dp)}
+    specs = {}
+    if cfg.input_mode == "frames":
+        specs["frames"] = P(dp, None, None)
+    else:
+        specs["tokens"] = P(dp, None)
+        if cfg.input_mode == "tokens+patches":
+            specs["patch_embeds"] = P(dp, None, None)
+    if kind == "train":
+        specs["labels"] = P(dp, None)
+    return specs

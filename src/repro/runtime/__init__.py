@@ -1,0 +1,5 @@
+"""Fault-tolerant runtime: training loop with restart + straggler watchdog."""
+
+from repro.runtime.loop import RunConfig, run_training, StragglerWatchdog
+
+__all__ = ["RunConfig", "run_training", "StragglerWatchdog"]

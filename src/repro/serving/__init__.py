@@ -1,0 +1,5 @@
+"""Serving: static-batch engine over prefill + decode steps."""
+
+from repro.serving.engine import ServeEngine, SamplerConfig
+
+__all__ = ["ServeEngine", "SamplerConfig"]

@@ -1,0 +1,14 @@
+"""Training substrate: optimizers, train step, gradient compression."""
+
+from repro.training.optimizer import OptConfig, init_opt_state, adamw_update, adafactor_update
+from repro.training.train_step import TrainState, make_train_step, init_train_state
+
+__all__ = [
+    "OptConfig",
+    "init_opt_state",
+    "adamw_update",
+    "adafactor_update",
+    "TrainState",
+    "make_train_step",
+    "init_train_state",
+]

@@ -1,0 +1,126 @@
+"""Optimizers in pure JAX: AdamW (configurable moment dtype — bf16 moments
+keep the 235B/400B MoE archs inside 16 GB/chip budgets) and Adafactor
+(factored second moment for the largest embedding tables)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"  # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"  # bfloat16 halves optimizer memory
+    warmup_steps: int = 100
+
+
+def schedule(cfg: OptConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def _global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def init_opt_state(params, cfg: OptConfig) -> dict:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    if cfg.kind == "adamw":
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mdt), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mdt), params),
+        }
+    if cfg.kind == "adafactor":
+        def vr(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-1], mdt)
+            return jnp.zeros(p.shape, mdt)
+
+        def vc(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], mdt)
+            return jnp.zeros((), mdt)
+
+        return {
+            "vr": jax.tree.map(vr, params),
+            "vc": jax.tree.map(vc, params),
+        }
+    raise ValueError(cfg.kind)
+
+
+def adamw_update(params, grads, opt_state, step, cfg: OptConfig):
+    lr = schedule(cfg, step)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1**t
+    bc2 = 1.0 - cfg.b2**t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+        step_ = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (step_ + cfg.weight_decay * p32)
+        return p32.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}
+
+
+def adafactor_update(params, grads, opt_state, step, cfg: OptConfig):
+    lr = schedule(cfg, step)
+    d = 1e-30
+
+    def upd(p, g, vr, vc):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + d
+        if p.ndim >= 2:
+            vr32 = cfg.b2 * vr.astype(jnp.float32) + (1 - cfg.b2) * g2.mean(-1)
+            vc32 = cfg.b2 * vc.astype(jnp.float32) + (1 - cfg.b2) * g2.mean(-2)
+            denom = jnp.sqrt(
+                vr32[..., :, None] * vc32[..., None, :] / jnp.maximum(
+                    vr32.mean(-1)[..., None, None], d
+                )
+            )
+        else:
+            vr32 = cfg.b2 * vr.astype(jnp.float32) + (1 - cfg.b2) * g2
+            vc32 = vc.astype(jnp.float32)
+            denom = jnp.sqrt(vr32)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (g32 / jnp.maximum(denom, cfg.eps) + cfg.weight_decay * p32)
+        return p32.astype(p.dtype), vr32.astype(vr.dtype), vc32.astype(vc.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_vr = treedef.flatten_up_to(opt_state["vr"])
+    flat_vc = treedef.flatten_up_to(opt_state["vc"])
+    out = [upd(*args) for args in zip(flat_p, flat_g, flat_vr, flat_vc)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    return new_p, {
+        "vr": treedef.unflatten([o[1] for o in out]),
+        "vc": treedef.unflatten([o[2] for o in out]),
+    }

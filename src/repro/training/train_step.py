@@ -1,0 +1,98 @@
+"""Train step builder: grad accumulation, clipping, optional gradient
+quantization (compression), loss/grad-norm metrics."""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import (
+    OptConfig,
+    adafactor_update,
+    adamw_update,
+    clip_by_global_norm,
+    init_opt_state,
+)
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten, lambda aux, ch: TrainState(*ch)
+)
+
+
+def init_train_state(model, key, opt_cfg: OptConfig) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=init_opt_state(params, opt_cfg),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def _quantize_dequantize(g, bits: int):
+    """Symmetric per-tensor fake-quantization (gradient compression model).
+
+    In a shard_map deployment the int8 payload rides the wire (see
+    repro.parallel.compression.compressed_psum); under jit/GSPMD the
+    reduction is emitted by XLA, so we model the precision loss here."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / (2 ** (bits - 1) - 1)
+    q = jnp.round(g32 / scale)
+    return (q * scale).astype(g.dtype)
+
+
+def make_train_step(model, opt_cfg: OptConfig, *, accum: int = 1,
+                    compress_bits: int | None = None, remat: bool = True):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    loss_fn = functools.partial(model.loss_fn, remat=remat)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def train_step(state: TrainState, batch):
+        if accum > 1:
+            def micro(carry, mb):
+                acc_loss, acc_g = carry
+                loss, g = grads_of(state.params, mb)
+                return (acc_loss + loss, jax.tree.map(jnp.add, acc_g, g)), None
+
+            micro_batches = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]), batch
+            )
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), _ = jax.lax.scan(micro, (0.0, zero), micro_batches)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+        else:
+            loss, grads = grads_of(state.params, batch)
+
+        if compress_bits:
+            grads = jax.tree.map(lambda g: _quantize_dequantize(g, compress_bits), grads)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+
+        if opt_cfg.kind == "adamw":
+            new_params, new_opt = adamw_update(state.params, grads, state.opt, state.step, opt_cfg)
+        else:
+            new_params, new_opt = adafactor_update(
+                state.params, grads, state.opt, state.step, opt_cfg
+            )
+        new_state = TrainState(params=new_params, opt=new_opt, step=state.step + 1)
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step

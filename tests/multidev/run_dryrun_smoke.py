@@ -1,0 +1,46 @@
+"""Subprocess worker: the dry-run machinery end-to-end on a small mesh.
+
+Lowers + compiles a reduced arch's train and decode steps on a 4x4 mesh of
+host devices, checking the analyzer produces coherent roofline terms."""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+
+import repro.launch.dryrun as dr  # noqa: E402
+import repro.configs as C  # noqa: E402
+from repro.configs import get_config, reduced  # noqa: E402
+
+
+def main():
+    mesh = jax.make_mesh((4, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # shrink shapes so CPU compile stays fast
+    C.SHAPES["train_4k"] = dataclasses.replace(C.SHAPES["train_4k"],
+                                               seq_len=128, global_batch=16)
+    C.SHAPES["decode_32k"] = dataclasses.replace(C.SHAPES["decode_32k"],
+                                                 seq_len=256, global_batch=16)
+    C.ARCHS["smoke"] = reduced(get_config("qwen3-moe-235b-a22b"), groups=2)
+
+    for shape in ("train_4k", "decode_32k"):
+        rec, _ = dr.lower_cell("smoke", shape, mesh, accum=2)
+        rl = rec["roofline"]
+        assert rec["ok"]
+        assert rl["hlo_flops"] > 0 and rl["collective_bytes"] > 0
+        assert rl["bottleneck"] in ("compute", "memory", "collective")
+        assert 0 <= rl["roofline_fraction"] <= 1.5
+        print(f"{shape}: ok bottleneck={rl['bottleneck']} "
+              f"flops={rl['hlo_flops']:.3g} coll={rl['collective_bytes']:.3g}")
+    print("DRYRUN-SMOKE-OK")
+
+
+if __name__ == "__main__":
+    main()

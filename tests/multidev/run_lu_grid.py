@@ -1,0 +1,58 @@
+"""Subprocess worker: distributed LU correctness on 8 host devices.
+
+Run by tests/test_lu_distributed.py (device count must be pinned before jax
+initializes, so this cannot live in the main pytest process).
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.core.lu.baseline2d import scalapack2d_lu
+from repro.core.lu.conflux import conflux_lu
+from repro.core.lu.grid import GridConfig
+from repro.core.lu.sequential import reconstruct
+
+
+def check(res, A, tag, tol=5e-5):
+    N = A.shape[0]
+    rec = np.asarray(reconstruct(jnp.asarray(res.F), jnp.asarray(res.rows)))
+    err = np.abs(rec - A).max() / np.abs(A).max()
+    assert err < tol, f"{tag}: reconstruction err {err}"
+    assert sorted(res.rows.tolist()) == list(range(N)), f"{tag}: bad permutation"
+    print(f"PASS {tag} err={err:.2e} comm/proc={res.comm['total']:.0f}")
+
+
+def main():
+    rng = np.random.default_rng(7)
+    grids = [
+        GridConfig(Px=2, Py=2, c=2, v=8, N=64),
+        GridConfig(Px=2, Py=2, c=2, v=16, N=128),
+        GridConfig(Px=4, Py=2, c=1, v=8, N=64),
+        GridConfig(Px=2, Py=1, c=4, v=8, N=96),
+        GridConfig(Px=1, Py=2, c=4, v=8, N=64),
+        GridConfig(Px=8, Py=1, c=1, v=8, N=64),
+    ]
+    for g in grids:
+        A = rng.standard_normal((g.N, g.N)).astype(np.float32)
+        check(conflux_lu(A, grid=g), A, f"conflux {g}")
+    A = rng.standard_normal((128, 128)).astype(np.float32)
+    check(scalapack2d_lu(A, P_target=8, v=16), A, "scalapack2d [2x4]")
+    # auto grid selection end-to-end
+    A = rng.standard_normal((128, 128)).astype(np.float32)
+    from repro.core.lu.conflux import distributed_lu
+
+    res = distributed_lu(A, M=2048.0)
+    check(res, A, f"auto-grid {res.grid}")
+    print("ALL-OK")
+
+
+if __name__ == "__main__":
+    main()

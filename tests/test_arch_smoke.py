@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests: reduced config, one forward/train/decode
+step on CPU, asserting output shapes and finiteness.  Full configs are
+exercised only through the dry-run (ShapeDtypeStruct, no allocation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, applicable_shapes, get_config, reduced, skipped_shapes
+from repro.models.model_zoo import build_model
+
+B, S = 2, 16
+
+
+def _batch(cfg):
+    key = jax.random.key(0)
+    batch = {"labels": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+    if cfg.input_mode == "frames":
+        batch["frames"] = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        if cfg.input_mode == "tokens+patches":
+            batch["patch_embeds"] = jax.random.normal(
+                key, (B, cfg.n_patches, cfg.d_model), jnp.float32
+            )
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+class TestArchSmoke:
+    def test_forward_and_loss(self, arch):
+        cfg = reduced(get_config(arch))
+        m = build_model(cfg)
+        params = m.init(jax.random.key(1))
+        batch = _batch(cfg)
+        logits = m.forward(params, batch)
+        assert logits.shape == (B, S, cfg.vocab)
+        assert bool(jnp.isfinite(logits).all())
+        loss = m.loss_fn(params, batch)
+        assert bool(jnp.isfinite(loss))
+        # random-init CE should be near ln(vocab)
+        assert float(loss) == pytest.approx(np.log(cfg.vocab), rel=0.35)
+
+    def test_train_step_reduces_loss(self, arch):
+        cfg = reduced(get_config(arch), groups=1)
+        m = build_model(cfg)
+        params = m.init(jax.random.key(2))
+        batch = _batch(cfg)
+
+        @jax.jit
+        def sgd(p, b):
+            l, g = jax.value_and_grad(lambda pp: m.loss_fn(pp, b))(p)
+            return l, jax.tree.map(lambda x, gx: x - 0.5 * gx.astype(x.dtype), p, g)
+
+        losses = []
+        for _ in range(5):
+            l, params = sgd(params, batch)
+            losses.append(float(l))
+        assert all(np.isfinite(losses))
+        assert losses[-1] < losses[0], f"{arch}: loss did not decrease {losses}"
+
+    def test_decode_if_applicable(self, arch):
+        cfg = reduced(get_config(arch))
+        if not cfg.causal:
+            pytest.skip("encoder-only: no decode step")
+        m = build_model(cfg)
+        params = m.init(jax.random.key(3))
+        caches = m.init_caches(batch_size=B, max_len=S)
+        tokens = jnp.zeros((B,), jnp.int32)
+        logits, caches2 = m.decode_step(params, caches, tokens, jnp.int32(0))
+        assert logits.shape == (B, cfg.vocab)
+        assert bool(jnp.isfinite(logits).all())
+        # caches structurally unchanged
+        assert jax.tree.structure(caches) == jax.tree.structure(caches2)
+
+    def test_param_specs_cover_params(self, arch):
+        cfg = reduced(get_config(arch))
+        m = build_model(cfg)
+        params = m.init(jax.random.key(4))
+        specs = m.param_specs()
+        pl = jax.tree.leaves(params)
+        sl = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, tuple))
+        assert len(pl) == len(sl)
+        for leaf, spec in zip(pl, sl):
+            assert leaf.ndim == len(spec), f"{arch}: rank mismatch {leaf.shape} vs {spec}"
+
+
+class TestShapeApplicability:
+    def test_cell_count_is_31(self):
+        cells = sum(len(applicable_shapes(c)) for c in ARCHS.values())
+        assert cells == 31  # 40 - 2 (encoder decode) - 7 (full-attn long_500k)
+
+    def test_long_runs_only_for_subquadratic(self):
+        runs_long = {a for a, c in ARCHS.items() if "long_500k" in applicable_shapes(c)}
+        assert runs_long == {"jamba-v0.1-52b", "falcon-mamba-7b"}
+
+    def test_encoder_skips_decode(self):
+        sk = skipped_shapes(get_config("hubert-xlarge"))
+        assert "decode_32k" in sk and "long_500k" in sk
+
+    def test_param_counts_in_expected_range(self):
+        """n_params approximations should land near the advertised sizes."""
+        expect = {
+            "starcoder2-15b": (13e9, 18e9),
+            "gemma2-9b": (8e9, 11e9),
+            "qwen3-8b": (7e9, 9.5e9),
+            "phi3-mini-3.8b": (3.3e9, 4.4e9),
+            "qwen3-moe-235b-a22b": (200e9, 260e9),
+            "llama4-maverick-400b-a17b": (380e9, 430e9),
+            "jamba-v0.1-52b": (45e9, 58e9),
+            "falcon-mamba-7b": (6e9, 8.5e9),
+            "internvl2-76b": (68e9, 84e9),
+        }
+        for arch, (lo, hi) in expect.items():
+            n = get_config(arch).n_params
+            assert lo <= n <= hi, f"{arch}: {n/1e9:.1f}B outside [{lo/1e9},{hi/1e9}]"
+
+    def test_active_params_moe(self):
+        cfg = get_config("qwen3-moe-235b-a22b")
+        assert cfg.n_active_params < 0.2 * cfg.n_params

@@ -1,0 +1,22 @@
+"""Dry-run machinery smoke test (subprocess, 16 pinned host devices)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+
+
+@pytest.mark.slow
+def test_dryrun_machinery_small_mesh():
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "multidev", "run_dryrun_smoke.py")],
+        capture_output=True,
+        text=True,
+        timeout=900,
+        env={**os.environ, "PYTHONPATH": os.path.join(HERE, "..", "src")},
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}"
+    assert "DRYRUN-SMOKE-OK" in proc.stdout

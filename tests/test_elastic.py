@@ -1,0 +1,23 @@
+"""Elastic checkpoint restore across mesh topologies (subprocess: needs 8
+pinned host devices)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+
+
+@pytest.mark.slow
+def test_elastic_restore_across_meshes():
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "multidev", "run_elastic_ckpt.py")],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env={**os.environ, "PYTHONPATH": os.path.join(HERE, "..", "src")},
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}"
+    assert "ELASTIC-OK" in proc.stdout

@@ -1,0 +1,144 @@
+"""HLO analyzer: trip-aware FLOP/byte/collective accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import analyze_hlo, _shape_bytes
+from repro.analysis.roofline import roofline, TPU_V5E
+
+
+class TestShapeParsing:
+    @pytest.mark.parametrize(
+        "s,b",
+        [
+            ("f32[8,256]{0,1}", 8 * 256 * 4),
+            ("bf16[2,3,4]", 48),
+            ("(f32[8]{0}, s32[4]{0})", 48),
+            ("pred[]", 1),
+            ("f8e4m3fn[128]", 128),
+        ],
+    )
+    def test_shape_bytes(self, s, b):
+        assert _shape_bytes(s) == b
+
+
+CANNED = """
+HloModule test, entry_computation_layout={()->f32[]}
+
+%region_body (p: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %p = (s32[], f32[64,64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[64,64]{1,0} get-tuple-element(%p), index=1
+  %all-gather.1 = f32[64,256]{1,0} all-gather(%x), channel_id=1, replica_groups=[2,4]<=[8], dimensions={1}
+  %c1 = s32[] constant(1)
+  %ip = s32[] add(%i, %c1)
+  ROOT %t = (s32[], f32[64,64]) tuple(%ip, %x)
+}
+
+%region_cond (p2: (s32[], f32[64,64])) -> pred[] {
+  %p2 = (s32[], f32[64,64]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %k = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i2, %k), direction=LT
+}
+
+ENTRY %main (a: f32[64,64]) -> f32[] {
+  %a = f32[64,64]{1,0} parameter(0)
+  %c0 = s32[] constant(0)
+  %tup = (s32[], f32[64,64]) tuple(%c0, %a)
+  %while.1 = (s32[], f32[64,64]) while(%tup), condition=%region_cond, body=%region_body
+  %y = f32[64,64]{1,0} get-tuple-element(%while.1), index=1
+  %all-reduce.7 = f32[64,64]{1,0} all-reduce(%y), channel_id=2, replica_groups=[1,8]<=[8], to_apply=%region_cond
+  %dot.3 = f32[64,64]{1,0} dot(%y, %all-reduce.7), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %r = f32[] reduce-window(%dot.3)
+}
+"""
+
+
+class TestCannedHlo:
+    def test_while_trip_count_multiplies_collectives(self):
+        rep = analyze_hlo(CANNED)
+        ag = [s for s in rep.sites if s.kind == "all-gather"]
+        assert len(ag) == 1
+        assert ag[0].multiplier == 10
+        assert ag[0].group_size == 4
+        # per-participant wire bytes: out 64*256*4 * (g-1)/g
+        assert ag[0].wire_bytes == pytest.approx(64 * 256 * 4 * 3 / 4)
+
+    def test_all_reduce_ring_bytes(self):
+        rep = analyze_hlo(CANNED)
+        ar = [s for s in rep.sites if s.kind == "all-reduce"]
+        assert len(ar) == 1
+        assert ar[0].multiplier == 1
+        assert ar[0].wire_bytes == pytest.approx(2 * 64 * 64 * 4 * 7 / 8)
+
+    def test_dot_flops(self):
+        rep = analyze_hlo(CANNED)
+        assert rep.dot_flops == pytest.approx(2 * 64 * 64 * 64)
+
+
+class TestCompiledScan:
+    """Trip-aware dot FLOPs equal the unrolled ground truth (single device)."""
+
+    def test_scan_equals_unroll_dot_flops(self):
+        D, L, B = 64, 7, 8
+
+        def unroll(x, ws):
+            for i in range(L):
+                x = jnp.tanh(x @ ws[i])
+            return x.sum()
+
+        def scan(x, ws):
+            out, _ = jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), x, ws)
+            return out.sum()
+
+        xs = jax.ShapeDtypeStruct((B, D), jnp.float32)
+        ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+        reps = {}
+        for name, fn in (("scan", scan), ("unroll", unroll)):
+            comp = jax.jit(fn).lower(xs, ws).compile()
+            reps[name] = analyze_hlo(comp.as_text())
+        truth = 2 * B * D * D * L
+        assert reps["unroll"].dot_flops == pytest.approx(truth, rel=0.01)
+        assert reps["scan"].dot_flops == pytest.approx(truth, rel=0.01)
+
+    def test_bytes_accessed_matches_xla_when_unrolled(self):
+        D, L, B = 64, 5, 8
+
+        def unroll(x, ws):
+            for i in range(L):
+                x = jnp.tanh(x @ ws[i])
+            return x.sum()
+
+        comp = jax.jit(unroll).lower(
+            jax.ShapeDtypeStruct((B, D), jnp.float32),
+            jax.ShapeDtypeStruct((L, D, D), jnp.float32),
+        ).compile()
+        rep = analyze_hlo(comp.as_text())
+        ca = comp.cost_analysis()
+        assert rep.bytes_accessed == pytest.approx(ca["bytes accessed"], rel=0.5)
+
+
+class TestRoofline:
+    def test_terms_and_bottleneck(self):
+        r = roofline(
+            arch="x", shape="train", mesh="16x16",
+            hlo_flops=1e15, hlo_bytes=1e12, collective_bytes=1e11,
+            model_flops=8e14,
+        )
+        assert r.t_compute == pytest.approx(1e15 / TPU_V5E.peak_flops)
+        assert r.t_memory == pytest.approx(1e12 / TPU_V5E.hbm_bw)
+        assert r.t_collective == pytest.approx(1e11 / TPU_V5E.ici_bw)
+        assert r.bottleneck == "compute"
+        assert 0 < r.roofline_fraction <= 1
+        assert r.flops_ratio == pytest.approx(0.8)
+
+    def test_memory_bound_case(self):
+        r = roofline(
+            arch="x", shape="decode", mesh="16x16",
+            hlo_flops=1e9, hlo_bytes=1e10, collective_bytes=1e6,
+            model_flops=1e9,
+        )
+        assert r.bottleneck == "memory"

@@ -1,0 +1,166 @@
+"""Pallas kernel sweeps: shapes x dtypes, allclose vs the ref.py oracles
+(interpret mode executes the kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, dtype=jnp.float32):
+    x = RNG.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype=dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-4)
+
+
+class TestSchurUpdate:
+    @pytest.mark.parametrize("m,n,k", [(128, 128, 128), (256, 128, 64), (384, 256, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, m, n, k, dtype):
+        A, L, U = _rand((m, n), dtype), _rand((m, k), dtype), _rand((k, n), dtype)
+        got = ops.schur_update(A, L, U, bm=128, bn=128, bk=64)
+        want = ref.schur_update(A, L, U)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+        )
+
+    def test_small_blocks(self):
+        A, L, U = _rand((64, 64)), _rand((64, 32)), _rand((32, 64))
+        got = ops.schur_update(A, L, U, bm=32, bn=32, bk=16)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.schur_update(A, L, U)), rtol=2e-4, atol=2e-4
+        )
+
+
+class TestLuPanel:
+    @pytest.mark.parametrize("R,v", [(64, 8), (256, 16), (128, 32)])
+    def test_sweep(self, R, v):
+        panel = _rand((R, v))
+        w = jnp.asarray((RNG.random(R) > 0.2).astype(np.float32))
+        gF, gO, gok = ops.lu_panel(panel, w)
+        rF, rO, rok = ref.lu_panel(panel, w)
+        np.testing.assert_array_equal(np.asarray(gO), np.asarray(rO))
+        np.testing.assert_array_equal(np.asarray(gok), np.asarray(rok))
+        np.testing.assert_allclose(np.asarray(gF), np.asarray(rF), rtol=1e-4, atol=1e-4)
+
+    def test_masked_rows_untouched(self):
+        panel = _rand((32, 8))
+        w = jnp.ones(32).at[jnp.asarray([3, 5])].set(0.0)
+        gF, _, _ = ops.lu_panel(panel, w)
+        np.testing.assert_array_equal(np.asarray(gF)[[3, 5]], np.asarray(panel)[[3, 5]])
+
+
+class TestTrsm:
+    @pytest.mark.parametrize("R,v", [(128, 16), (256, 32), (512, 64)])
+    def test_right_upper(self, R, v):
+        U = jnp.triu(_rand((v, v))) + 3.0 * jnp.eye(v)
+        B = _rand((R, v))
+        got = ops.trsm_right_upper(B, U, br=128)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.trsm_right_upper(B, U)), rtol=2e-4, atol=2e-4
+        )
+        # residual check: X @ U == B
+        np.testing.assert_allclose(np.asarray(got @ U), np.asarray(B), rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("v,C", [(16, 128), (32, 256)])
+    @pytest.mark.parametrize("unit", [True, False])
+    def test_left_lower(self, v, C, unit):
+        L = jnp.tril(_rand((v, v)), -1) + (jnp.eye(v) if unit else 2.0 * jnp.eye(v))
+        B = _rand((v, C))
+        got = ops.trsm_left_lower(L, B, bc=128, unit=unit)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.trsm_left_lower(L, B, unit=unit)),
+            rtol=2e-4, atol=2e-4,
+        )
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,S,H,KV,hd", [(2, 256, 4, 2, 32), (1, 128, 8, 8, 64),
+                                             (2, 128, 4, 1, 16)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_causal_sweep(self, B, S, H, KV, hd, dtype):
+        q, k, v = (_rand((B, S, H, hd), dtype), _rand((B, S, KV, hd), dtype),
+                   _rand((B, S, KV, hd), dtype))
+        got = ops.flash_attention(q, k, v, bq=64, bkv=64)
+        want = ref.flash_attention(q, k, v)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+        )
+
+    def test_sliding_window(self):
+        q, k, v = _rand((1, 256, 2, 2, 16)[1:]), None, None  # placeholder reshaping below
+        q = _rand((1, 256, 2, 16))
+        k = _rand((1, 256, 2, 16))
+        v = _rand((1, 256, 2, 16))
+        got = ops.flash_attention(q, k, v, window=64, bq=64, bkv=64)
+        want = ref.flash_attention(q, k, v, window=64)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+    def test_softcap(self):
+        q = _rand((1, 128, 2, 16))
+        k = _rand((1, 128, 1, 16))
+        v = _rand((1, 128, 1, 16))
+        got = ops.flash_attention(q, k, v, softcap=30.0, bq=64, bkv=64)
+        want = ref.flash_attention(q, k, v, softcap=30.0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+    def test_bidirectional(self):
+        q = _rand((1, 128, 2, 16))
+        k = _rand((1, 128, 2, 16))
+        v = _rand((1, 128, 2, 16))
+        got = ops.flash_attention(q, k, v, causal=False, bq=64, bkv=64)
+        want = ref.flash_attention(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+    @settings(max_examples=6, deadline=None)
+    @given(st.sampled_from([64, 128]), st.sampled_from([1, 2]), st.sampled_from([16, 32]))
+    def test_property_matches_ref(self, S, KV, hd):
+        H = KV * 2
+        q, k, v = _rand((1, S, H, hd)), _rand((1, S, KV, hd)), _rand((1, S, KV, hd))
+        got = ops.flash_attention(q, k, v, bq=64, bkv=64)
+        want = ref.flash_attention(q, k, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-4)
+
+
+class TestMambaScan:
+    @pytest.mark.parametrize("B,S,di,N", [(2, 128, 64, 4), (1, 256, 128, 16), (2, 64, 32, 8)])
+    def test_sweep(self, B, S, di, N):
+        a = jnp.asarray(RNG.uniform(0.6, 0.999, (B, S, di, N)).astype(np.float32))
+        b = _rand((B, S, di, N))
+        C = _rand((B, S, N))
+        got = ops.mamba_scan(a, b, C, bd=32, cs=32)
+        want = ref.mamba_scan(a, b, C)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_state_carries_across_chunks(self):
+        """Chunked result must equal a single-chunk run (cs = S)."""
+        B, S, di, N = 1, 64, 16, 4
+        a = jnp.asarray(RNG.uniform(0.8, 0.99, (B, S, di, N)).astype(np.float32))
+        b = _rand((B, S, di, N))
+        C = _rand((B, S, N))
+        chunked = ops.mamba_scan(a, b, C, bd=16, cs=8)
+        whole = ops.mamba_scan(a, b, C, bd=16, cs=64)
+        np.testing.assert_allclose(np.asarray(chunked), np.asarray(whole), rtol=1e-5, atol=1e-5)
+
+
+class TestModelUsesKernelSemantics:
+    """The model's blocked attention (jnp path) equals the Pallas kernel —
+    proving the kernel can be swapped in on TPU without numeric drift."""
+
+    def test_blocked_attention_matches_flash_kernel(self):
+        from repro.models.layers.attention import blocked_attention
+
+        B, S, H, KV, hd = 1, 128, 4, 2, 32
+        q, k, v = _rand((B, S, H, hd)), _rand((B, S, KV, hd)), _rand((B, S, KV, hd))
+        pos = jnp.arange(S)
+        jnp_out = blocked_attention(q, k, v, pos, pos, causal=True, chunk=64)
+        pl_out = ops.flash_attention(q, k, v, bq=64, bkv=64)
+        np.testing.assert_allclose(np.asarray(jnp_out), np.asarray(pl_out), rtol=3e-4, atol=3e-4)

@@ -1,0 +1,79 @@
+"""MoE routing: sort-based dispatch (shipped default) vs scatter baseline."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.config import LayerSpec, ModelConfig, MoEConfig
+from repro.models.layers.moe import _dispatch_sort, init_moe, moe_forward
+
+
+def _cfg(dispatch="sort", cap_factor=8.0, E=8, K=2, G=2):
+    return ModelConfig(
+        name="t", family="moe", n_layers=2, d_model=32, n_heads=4, n_kv=2,
+        head_dim=8, d_ff=64, vocab=97, pattern=(LayerSpec("attn", "moe"),),
+        moe=MoEConfig(n_experts=E, top_k=K, d_ff_expert=16, n_dispatch_groups=G,
+                      capacity_factor=cap_factor, dispatch=dispatch),
+        param_dtype="float32",
+    )
+
+
+class TestDispatchEquivalence:
+    def test_sort_equals_scatter_no_drops(self):
+        cfg = _cfg("sort")
+        params = init_moe(jax.random.key(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.key(1), (2, 16, 32))
+        y_sort = moe_forward(params, cfg, x)
+        y_scat = moe_forward(params, _cfg("scatter"), x)
+        np.testing.assert_allclose(np.asarray(y_sort), np.asarray(y_scat), atol=1e-6)
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 4]))
+    def test_property_equivalence(self, seed, K):
+        cfg = _cfg("sort", K=K)
+        params = init_moe(jax.random.key(7), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.key(seed), (2, 16, 32))
+        y_sort = moe_forward(params, cfg, x)
+        y_scat = moe_forward(params, _cfg("scatter", K=K), x)
+        np.testing.assert_allclose(np.asarray(y_sort), np.asarray(y_scat), atol=1e-5)
+
+    def test_drops_are_bounded(self):
+        """With capacity_factor=1.0 some tokens drop; output stays finite and
+        within ~25%% of the undropped norm for balanced-ish routing."""
+        cfg = _cfg("sort", cap_factor=1.0)
+        params = init_moe(jax.random.key(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.key(1), (2, 16, 32))
+        y_tight = moe_forward(params, cfg, x)
+        y_loose = moe_forward(params, _cfg("sort", cap_factor=8.0), x)
+        assert bool(jnp.isfinite(y_tight).all())
+        ratio = float(jnp.linalg.norm(y_tight) / jnp.linalg.norm(y_loose))
+        assert 0.5 < ratio <= 1.01
+
+
+class TestSortDispatchInternals:
+    def test_slot_assignment_is_consistent(self):
+        """token_for_slot and slot_of_choice must be inverse views."""
+        G, T, K, E, cap = 1, 16, 2, 4, 16
+        top_e = jax.random.randint(jax.random.key(0), (G, T, K), 0, E)
+        tfs, valid, slot, keep = _dispatch_sort(top_e, T, E, cap)
+        tfs, valid = np.asarray(tfs), np.asarray(valid)
+        slot, keep = np.asarray(slot), np.asarray(keep)
+        for t in range(T):
+            for k in range(K):
+                if keep[0, t, k]:
+                    e = int(top_e[0, t, k])
+                    s = int(slot[0, t, k])
+                    assert valid[0, e, s]
+                    assert tfs[0, e, s] == t
+
+    def test_capacity_respected(self):
+        G, T, K, E, cap = 1, 64, 4, 2, 8  # heavy oversubscription
+        top_e = jnp.zeros((G, T, K), jnp.int32)  # everyone wants expert 0
+        tfs, valid, slot, keep = _dispatch_sort(top_e, T, E, cap)
+        assert int(np.asarray(keep).sum()) == cap  # only cap choices kept
+        assert int(np.asarray(valid)[0, 0].sum()) == cap
+        assert int(np.asarray(valid)[0, 1].sum()) == 0

@@ -1,0 +1,81 @@
+"""Sharding rules: logical-axis mapping, divisibility sanitizer, batch specs."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.parallel.sharding import (
+    batch_pspecs,
+    make_rules,
+    sanitize_pspec,
+    template_to_pspec,
+)
+
+
+def _mesh(shape=(2, 2), axes=("data", "model")):
+    return jax.sharding.AbstractMesh(shape, axes)
+
+
+class TestRules:
+    def test_template_mapping(self):
+        rules = make_rules(_mesh())
+        assert template_to_pspec(("fsdp", "tp", None), rules) == P("data", "model", None)
+        assert template_to_pspec(("dp", None), rules) == P(("data",), None)
+
+    def test_pod_axis_extends_dp(self):
+        mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+        rules = make_rules(mesh)
+        assert rules.axes("dp") == ("pod", "data")
+
+    def test_kv_axis_depends_on_divisibility(self):
+        mesh = _mesh((2, 16), ("data", "model"))
+        phi3 = get_config("phi3-mini-3.8b")  # kv=32: divisible by 16
+        qwen = get_config("qwen3-8b")  # kv=8: not divisible
+        assert make_rules(mesh, model_cfg=phi3).axes("kv") == "model"
+        assert make_rules(mesh, model_cfg=qwen).axes("kv") is None
+
+    def test_fsdp_off(self):
+        rules = make_rules(_mesh(), fsdp=False)
+        assert rules.axes("fsdp") is None
+
+
+class TestSanitizer:
+    def test_drops_non_divisible_axis(self):
+        mesh = _mesh((2, 16), ("data", "model"))
+        # 40 heads on a 16-way axis -> replicate (llama4 case)
+        spec = sanitize_pspec(P("data", "model", None), (64, 40, 128), mesh)
+        assert spec == P("data", None, None)
+
+    def test_keeps_divisible(self):
+        mesh = _mesh((2, 16), ("data", "model"))
+        spec = sanitize_pspec(P("data", "model"), (64, 32), mesh)
+        assert spec == P("data", "model")
+
+    def test_partial_tuple(self):
+        mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+        # batch 2 divisible by pod(2) but not pod*data(4)
+        spec = sanitize_pspec(P(("pod", "data"), None), (2, 8), mesh)
+        assert spec == P("pod", None)
+
+    def test_batch_one_replicates(self):
+        mesh = _mesh((2, 16), ("data", "model"))
+        spec = sanitize_pspec(P("data", "model", None, None), (1, 524288, 8, 128), mesh)
+        assert spec == P(None, "model", None, None)
+
+
+class TestBatchSpecs:
+    @pytest.mark.parametrize("arch,key", [
+        ("qwen3-8b", "tokens"),
+        ("hubert-xlarge", "frames"),
+        ("internvl2-76b", "patch_embeds"),
+    ])
+    def test_input_keys(self, arch, key):
+        rules = make_rules(_mesh())
+        specs = batch_pspecs(get_config(arch), rules, kind="train")
+        assert key in specs and "labels" in specs
+
+    def test_decode_kind(self):
+        rules = make_rules(_mesh())
+        specs = batch_pspecs(get_config("qwen3-8b"), rules, kind="decode")
+        assert list(specs) == ["tokens"]

@@ -1,0 +1,165 @@
+"""xpart lower-bound machinery vs. the paper's closed forms (§3-§6)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.xpart import (
+    Access,
+    Statement,
+    max_computational_intensity,
+    parallel_io_lower_bound,
+    psi,
+    sequential_io_lower_bound,
+)
+from repro.core.xpart.lu_bound import (
+    lu_parallel_lower_bound,
+    lu_sequential_lower_bound,
+    lu_statements,
+)
+from repro.core.xpart.reuse import input_reuse
+
+M = 1024.0
+N = 8192.0
+
+
+def _mmm_statement(domain=1e9):
+    # T: C[i,j] += A[i,k] * B[k,j]
+    return Statement(
+        "T",
+        ("i", "j", "k"),
+        Access("C", ("i", "j")),
+        (Access("C", ("i", "j")), Access("A", ("i", "k")), Access("B", ("k", "j"))),
+        domain_size=domain,
+    )
+
+
+class TestClosedForms:
+    def test_mmm_rho_is_sqrtM_over_2(self):
+        r = max_computational_intensity(_mmm_statement(), M)
+        assert r.rho == pytest.approx(math.sqrt(M) / 2, rel=1e-2)
+        assert r.X0 == pytest.approx(3 * M, rel=2e-2)
+
+    def test_mmm_bound_is_2n3_over_sqrtM(self):
+        n3 = N**3
+        q = sequential_io_lower_bound(_mmm_statement(domain=n3), M)
+        assert q == pytest.approx(2 * n3 / math.sqrt(M), rel=1e-2)
+
+    def test_paper_4_1_example_no_output_access(self):
+        # S: D[i,j,k] = A[i,k] * B[k,j]   ->  X0 = 2M, rho = M
+        s = Statement(
+            "S",
+            ("i", "j", "k"),
+            Access("D", ("i", "j", "k")),
+            (Access("A", ("i", "k")), Access("B", ("k", "j"))),
+            domain_size=N**3,
+            var_caps={"i": N, "j": N, "k": N},
+        )
+        r = max_computational_intensity(s, M)
+        assert r.rho == pytest.approx(M, rel=1e-2)
+        assert r.X0 == pytest.approx(2 * M, rel=2e-2)
+
+    def test_lu_s1_intensity_one(self):
+        s1, _ = lu_statements(N, M)
+        r = max_computational_intensity(s1, M)
+        assert r.rho == pytest.approx(1.0, rel=1e-2)
+
+    def test_lu_s2_intensity_sqrtM_over_2(self):
+        _, s2 = lu_statements(N, M)
+        r = max_computational_intensity(s2, M)
+        assert r.rho == pytest.approx(math.sqrt(M) / 2, rel=1e-2)
+
+    def test_lu_end_to_end_matches_paper_closed_form(self):
+        s1, s2 = lu_statements(N, M)
+        q = sequential_io_lower_bound(s2, M) + s1.domain_size  # rho_S1 = 1
+        assert q == pytest.approx(lu_sequential_lower_bound(N, M), rel=1e-2)
+
+    def test_lu_parallel_bound_leading_term(self):
+        for P in (64, 1024):
+            q = lu_parallel_lower_bound(N, P, M)
+            lead = 2 * N**3 / (3 * P * math.sqrt(M))
+            assert q >= lead
+            assert q == pytest.approx(lead, rel=0.2)  # lower-order N^2/P slack
+
+    def test_access_vector_with_repeated_variable_dedupes(self):
+        # A[k,k] has access dimension 1 (paper §2.2 item 7)
+        a = Access("A_kk", ("k", "k"))
+        assert a.vars == ("k",)
+
+
+class TestPsiProperties:
+    def test_s1_psi_is_X_minus_1(self):
+        s1, _ = lu_statements(N, M)
+        p = psi(s1, 4 * M)
+        assert p.value == pytest.approx(4 * M - 1, rel=1e-2)
+        assert p.extents["k"] == pytest.approx(1.0, abs=0.05)
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.floats(min_value=2.0, max_value=64.0))
+    def test_psi_monotone_in_X(self, mult):
+        t = _mmm_statement()
+        p1 = psi(t, mult * M)
+        p2 = psi(t, 2 * mult * M)
+        assert p2.value >= p1.value * 0.999
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        st.integers(min_value=1, max_value=3),
+        st.integers(min_value=2, max_value=4),
+    )
+    def test_psi_feasible_and_positive(self, n_acc, l):
+        lv = tuple(f"r{t}" for t in range(l))
+        inputs = tuple(
+            Access(f"A{j}", tuple(lv[k] for k in range(l) if (j + k) % 2 == 0) or (lv[0],))
+            for j in range(n_acc)
+        )
+        s = Statement("rand", lv, Access("O", lv), inputs, domain_size=1e6,
+                      var_caps={v: 1e5 for v in lv})
+        X = 8 * M
+        p = psi(s, X)
+        assert p.value >= 1.0
+        sizes = p.access_sizes(s)
+        assert sum(sizes.values()) <= X * 1.01
+
+    def test_bound_decreases_with_memory(self):
+        t = _mmm_statement(domain=N**3)
+        q_small = sequential_io_lower_bound(t, 256.0)
+        q_big = sequential_io_lower_bound(t, 4096.0)
+        assert q_big < q_small
+
+    def test_parallel_bound_scales_inverse_P(self):
+        t = _mmm_statement(domain=N**3)
+        q64 = parallel_io_lower_bound(t, M, 64)
+        q256 = parallel_io_lower_bound(t, M, 256)
+        assert q64 == pytest.approx(4 * q256, rel=1e-6)
+
+
+class TestReuse:
+    def test_shared_input_reuse_matches_paper_example(self):
+        # Paper §4.1: S and T share B; Reuse(B) = N^3/M, Q_tot = N^3/M.
+        # (No var_caps: the paper's example analyzes the uncapped regime, where
+        # X0 = 2M; extent caps would legitimately tighten the bound further.)
+        n = 512.0
+        dom = n**3
+        s = Statement("S", ("i", "j", "k"), Access("D", ("i", "j", "k")),
+                      (Access("A", ("i", "k")), Access("B", ("k", "j"))), dom)
+        t = Statement("T", ("i", "j", "k"), Access("E", ("i", "j", "k")),
+                      (Access("C", ("i", "k")), Access("B", ("k", "j"))), dom)
+        reuse = input_reuse([s, t], "B", M)
+        assert reuse == pytest.approx(dom / M, rel=5e-2)
+
+    def test_output_reuse_zero_coeff_drops_constraint(self):
+        # Modified MMM (§4.2): A produced at no load cost (rho -> inf, coeff 0):
+        # bound falls from 2N^3/sqrt(M) to N^3/M (cache C, stream B).
+        n3 = N**3
+        t_free_A = Statement(
+            "T",
+            ("i", "j", "k"),
+            Access("C", ("i", "j")),
+            (Access("C", ("i", "j")), Access("A", ("i", "k"), coeff=0.0), Access("B", ("k", "j"))),
+            domain_size=n3,
+            var_caps={"i": N, "j": N, "k": N},
+        )
+        q = sequential_io_lower_bound(t_free_A, M)
+        assert q == pytest.approx(n3 / M, rel=5e-2)
