@@ -1,9 +1,14 @@
-"""Executed distributed LU at container scale: correctness + wall time +
-instrumented comm volume on 8 host devices (subprocess because the device
-count must be pinned before jax initializes)."""
+"""Executed distributed LU at container scale via the plan/execute API:
+correctness + wall time + instrumented comm volume + plan-cache/trace
+counters on 8 host devices (subprocess because the device count must be
+pinned before jax initializes).
+
+Each strategy executes the same plan twice: the second run demonstrates the
+re-trace win (trace_count stays 1, the plan cache reports a hit)."""
 
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
@@ -11,27 +16,56 @@ import sys
 _WORKER = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import sys, time
+import sys, time, json
 sys.path.insert(0, %r)
 import numpy as np, jax.numpy as jnp
-from repro.core.lu.conflux import conflux_lu
-from repro.core.lu.baseline2d import scalapack2d_lu
-from repro.core.lu.grid import GridConfig
-from repro.core.lu.sequential import reconstruct
+from repro.api import SolverConfig, plan, plan_cache_stats, GridConfig
+from repro.core.lu.cost_models import conflux_model, scalapack2d_model
 
 rng = np.random.default_rng(0)
-print("impl,N,grid,us_per_call,err,comm_per_proc")
+records = []
+print("impl,N,grid,us_per_call,err,comm_per_proc,traces,cache_hits")
 for N in (128, 256):
     A = rng.standard_normal((N, N)).astype(np.float32)
-    for name, fn in [
-        ("COnfLUX", lambda A: conflux_lu(A, grid=GridConfig(Px=2, Py=2, c=2, v=16, N=A.shape[0]))),
-        ("ScaLAPACK2D", lambda A: scalapack2d_lu(A, P_target=8, v=16)),
-    ]:
-        res = fn(A)  # warm compile
-        t0 = time.perf_counter(); res = fn(A); dt = time.perf_counter() - t0
-        rec = np.asarray(reconstruct(jnp.asarray(res.F), jnp.asarray(res.rows)))
+    b = rng.standard_normal((N, 4)).astype(np.float32)
+    configs = [
+        ("conflux", SolverConfig(strategy="conflux",
+                                 grid=GridConfig(Px=2, Py=2, c=2, v=16, N=N))),
+        ("baseline2d", SolverConfig(strategy="baseline2d", P_target=8, v=16)),
+        ("sequential", SolverConfig(strategy="sequential")),
+    ]
+    for name, cfg in configs:
+        hits0 = plan_cache_stats()["hits"]
+        p = plan(N, cfg)
+        res = p.execute(A)            # warm compile
+        p2 = plan(N, cfg)             # must be a cache hit, no re-trace
+        t0 = time.perf_counter(); res = p2.execute(A); dt = time.perf_counter() - t0
+        hits = plan_cache_stats()["hits"] - hits0
+        rec = np.asarray(res.reconstruct())
         err = float(np.abs(rec - A).max() / np.abs(A).max())
-        print(f"{name},{N},{res.grid},{dt*1e6:.0f},{err:.2e},{res.comm['total']:.0f}")
+        x = np.asarray(res.solve(b))
+        solve_err = float(np.abs(A @ x - b).max())
+        comm = res.comm.get("total", 0.0)
+        P_used = res.grid.P_used if res.grid else 1
+        if res.grid is None:
+            model = 0.0
+        elif name == "baseline2d":
+            model = scalapack2d_model(N, P_used)
+        else:
+            model = conflux_model(N, P_used, M=max(N * N * res.grid.c / P_used, 4.0))
+        print(f"{name},{N},{res.grid},{dt*1e6:.0f},{err:.2e},{comm:.0f},"
+              f"{p.trace_count},{hits}")
+        records.append({
+            "strategy": name, "N": N, "grid": str(res.grid),
+            "wall_us_per_call": dt * 1e6, "reconstruction_err": err,
+            "solve_err": solve_err, "comm_per_proc_elements": comm,
+            "model_per_proc_elements": model,
+            "trace_count": p.trace_count, "plan_cache_hits": hits,
+            "plan_is_shared": p is p2,
+        })
+assert all(r["trace_count"] == 1 for r in records), "a plan re-traced!"
+print("BENCH_JSON:" + json.dumps({"measured": records,
+                                  "plan_cache": plan_cache_stats()}))
 """
 
 
@@ -42,8 +76,13 @@ def main(csv: bool = True):
     )
     if proc.returncode != 0:
         raise RuntimeError(proc.stderr[-2000:])
-    print(proc.stdout.strip())
-    return proc.stdout
+    payload = None
+    for line in proc.stdout.splitlines():
+        if line.startswith("BENCH_JSON:"):
+            payload = json.loads(line[len("BENCH_JSON:"):])
+        else:
+            print(line)
+    return payload
 
 
 if __name__ == "__main__":

@@ -2,13 +2,20 @@
 
     PYTHONPATH=src python -m benchmarks.run [--skip-measured]
 
-Prints ``name,us_per_call,derived``-style CSV blocks per section.
+Prints ``name,us_per_call,derived``-style CSV blocks per section and writes
+a machine-readable ``BENCH_lu.json`` next to the repo root (per-strategy
+wall time, instrumented comm volume, model prediction, and plan-cache
+hit/miss + trace counts) so successive PRs accumulate a perf trajectory.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
+
+BENCH_JSON = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "BENCH_lu.json"))
 
 
 def _section(title):
@@ -17,18 +24,19 @@ def _section(title):
 
 def main() -> None:
     skip_measured = "--skip-measured" in sys.argv
+    bench: dict = {"schema": "BENCH_lu.v1"}
 
     _section("Table 2: communication volume models vs paper (GB)")
     t0 = time.perf_counter()
     from benchmarks import table2
 
-    table2.main()
+    bench["table2"] = table2.main()
     print(f"# table2 done in {time.perf_counter()-t0:.1f}s")
 
     _section("Fig 6a/6b/7: scaling + exascale extrapolation")
     from benchmarks import scaling
 
-    scaling.main()
+    bench["scaling"] = scaling.main()
 
     _section("Section 6: I/O lower bounds (solver vs closed form)")
     from benchmarks import lower_bounds
@@ -36,15 +44,21 @@ def main() -> None:
     lower_bounds.main()
 
     if not skip_measured:
-        _section("Executed distributed LU (8 host devices)")
+        _section("Executed distributed LU via plan/execute (8 host devices)")
         from benchmarks import lu_measured
 
-        lu_measured.main()
+        measured = lu_measured.main()
+        if measured:
+            bench.update(measured)
 
     _section("Roofline table (from dry-run results, single pod)")
     from benchmarks import roofline_table
 
     roofline_table.main()
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump(bench, f, indent=1, default=str)
+    print(f"\n# wrote {BENCH_JSON}")
 
 
 if __name__ == "__main__":

@@ -9,9 +9,8 @@ from __future__ import annotations
 
 import math
 
-from repro.core.lu.conflux import lu_comm_volume
+from repro.api import GridConfig, comm_volume
 from repro.core.lu.cost_models import candmc_model, conflux_model, scalapack2d_model
-from repro.core.lu.grid import GridConfig
 
 
 def _grids(N, P):
@@ -30,7 +29,7 @@ def fig6a(N=16384, Ps=(4, 8, 16, 32, 64, 128, 256, 512, 1024)):
         g, M = _grids(N, P)
         rows.append({
             "P": P,
-            "conflux_instrumented": lu_comm_volume(N, g)["total"],
+            "conflux_instrumented": comm_volume(N, g)["total"],
             "conflux_model": conflux_model(N, P, M),
             "scalapack2d_model": scalapack2d_model(N, P),
             "candmc_model": candmc_model(N, P, M),

@@ -6,10 +6,9 @@ from __future__ import annotations
 
 import math
 
+from repro.api import GridConfig, comm_volume
 from repro.configs.conflux import TABLE2, TABLE2_PAPER_GB
-from repro.core.lu.conflux import lu_comm_volume
 from repro.core.lu.cost_models import model_gigabytes
-from repro.core.lu.grid import GridConfig
 from repro.core.xpart.lu_bound import lu_parallel_lower_bound
 
 
@@ -25,8 +24,8 @@ def rows():
         g25 = GridConfig(Px=px, Py=py, c=c, v=v, N=N)
         g2d = GridConfig(Px=2 ** int(math.log2(math.isqrt(P))),
                          Py=P // (2 ** int(math.log2(math.isqrt(P)))), c=1, v=v, N=N)
-        counted = lu_comm_volume(N, g25)["total"] * P * 8 / 1e9
-        counted2d = lu_comm_volume(N, g2d, pivot="partial")["total"] * P * 8 / 1e9
+        counted = comm_volume(N, g25)["total"] * P * 8 / 1e9
+        counted2d = comm_volume(N, g2d, pivot="partial")["total"] * P * 8 / 1e9
         bound = lu_parallel_lower_bound(N, P, M) * P * 8 / 1e9
         for name in ("LibSci", "SLATE", "CANDMC", "COnfLUX"):
             meas, model = TABLE2_PAPER_GB[(name, N, P)]

@@ -9,8 +9,7 @@ and replication c > 1 buys a sqrt(c) reduction while memory allows.
 
 import math
 
-from repro.core.lu.conflux import lu_comm_volume
-from repro.core.lu.grid import GridConfig, optimize_grid
+from repro.api import GridConfig, comm_volume, optimize_grid
 
 
 def main():
@@ -27,7 +26,7 @@ def main():
             px = 2 ** int(math.log2(max(math.isqrt(p2), 1)))
             py = max(p2 // px, 1)
             v = max(min(64, N // max(px, py)), 8)
-            vols[c] = lu_comm_volume(N, GridConfig(Px=px, Py=py, c=c, v=v, N=N))["total"]
+            vols[c] = comm_volume(N, GridConfig(Px=px, Py=py, c=c, v=v, N=N))["total"]
         best = optimize_grid(N, P, M=16 * N * N / P)
         print(f"{P:>7} {vols[1]:>14,.0f} {vols[4]:>14,.0f} {vols[16]:>14,.0f} {str(best):>24}")
     print("\n(The same tradeoff drives the LM sharding rules: replicating weights"

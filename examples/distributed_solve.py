@@ -1,6 +1,6 @@
-"""End-to-end distributed COnfLUX on 8 host devices: 2.5D factorization with
-tournament pivoting, triangular solve, and the instrumented communication
-volume vs the ScaLAPACK-style 2D baseline.
+"""End-to-end distributed plan/execute on 8 host devices: 2.5D COnfLUX with
+tournament pivoting vs the ScaLAPACK-style 2D baseline, multi-RHS solves,
+and the instrumented communication volume — all through `repro.api`.
 
     PYTHONPATH=src python examples/distributed_solve.py
 """
@@ -12,13 +12,8 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
-from repro.core.lu.baseline2d import scalapack2d_lu  # noqa: E402
-from repro.core.lu.conflux import conflux_lu  # noqa: E402
-from repro.core.lu.grid import GridConfig  # noqa: E402
-from repro.core.lu.sequential import reconstruct  # noqa: E402
-from repro.core.solve import lu_solve  # noqa: E402
+from repro.api import GridConfig, SolverConfig, plan, plan_cache_stats  # noqa: E402
 
 
 def main():
@@ -27,20 +22,24 @@ def main():
     A = rng.standard_normal((N, N)).astype(np.float32)
     b = rng.standard_normal(N).astype(np.float32)
 
-    grid = GridConfig(Px=2, Py=2, c=2, v=16, N=N)  # 2.5D: 2x2 grid, 2 layers
-    res = conflux_lu(A, grid=grid)
-    err = float(np.abs(np.asarray(reconstruct(jnp.asarray(res.F), jnp.asarray(res.rows))) - A).max())
-    x = lu_solve(jnp.asarray(res.F), jnp.asarray(res.rows), jnp.asarray(b))
+    # 2.5D COnfLUX: 2x2 grid, 2 replication layers.
+    cfg = SolverConfig(strategy="conflux", grid=GridConfig(Px=2, Py=2, c=2, v=16, N=N))
+    p = plan(N, cfg)
+    res = p.execute(A)
+    err = float(np.abs(np.asarray(res.reconstruct()) - A).max())
+    x = res.solve(b)
     print(f"COnfLUX {res.grid}: reconstruction err {err:.2e}, "
           f"solve residual {float(np.abs(A @ np.asarray(x) - b).max()):.2e}")
-    print("  instrumented comm/proc (elements):")
-    for k, v in res.comm.items():
-        if isinstance(v, float):
-            print(f"    {k:20s} {v:12,.0f}")
+    print(res.comm_report())
 
-    res2d = scalapack2d_lu(A, P_target=8, v=16)
-    err2d = float(np.abs(np.asarray(
-        reconstruct(jnp.asarray(res2d.F), jnp.asarray(res2d.rows))) - A).max())
+    # Same plan key -> cache hit, no re-trace on the second execute.
+    res_again = plan(N, cfg).execute(A)
+    assert np.allclose(res_again.F, res.F)
+    print(f"\nplan reused: traces={p.trace_count}, executes={p.execute_count}, "
+          f"cache={plan_cache_stats()}")
+
+    res2d = plan(N, SolverConfig(strategy="baseline2d", P_target=8, v=16)).execute(A)
+    err2d = float(np.abs(np.asarray(res2d.reconstruct()) - A).max())
     print(f"\n2D baseline {res2d.grid}: err {err2d:.2e}, "
           f"comm/proc {res2d.comm['total']:,.0f} elements")
     print(f"\nCOnfLUX communicates {res2d.comm['total'] / res.comm['total']:.2f}x less "

@@ -1,13 +1,11 @@
-"""Quickstart: COnfLUX masked LU + solve + the paper's I/O lower bound.
+"""Quickstart: the plan/execute solver API + the paper's I/O lower bound.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core.lu.sequential import lu_masked_sequential, reconstruct, unpack_factors
-from repro.core.solve import lu_solve, solve
+from repro.api import SolverConfig, plan, plan_cache_stats
 from repro.core.xpart.lu_bound import (
     conflux_io_cost,
     lu_parallel_lower_bound,
@@ -19,19 +17,36 @@ def main():
     N = 256
     A = rng.standard_normal((N, N)).astype(np.float32)
     b = rng.standard_normal(N).astype(np.float32)
+    B = rng.standard_normal((N, 8)).astype(np.float32)
 
-    # masked LU: rows never move; pivot order is an index vector (paper §7.3)
-    F, rows = lu_masked_sequential(jnp.asarray(A), v=32)
-    err = float(np.abs(np.asarray(reconstruct(F, rows)) - A).max())
-    P_, L, U = unpack_factors(F, rows)
+    # 1. plan once: strategy resolution + trace + compile happen here.
+    #    "auto" runs Processor Grid Optimization and falls back to the
+    #    sequential masked LU on one device.
+    p = plan(N, SolverConfig(strategy="auto"))
+    print(f"plan: {p}")
+
+    # 2. execute against data: no re-trace, masked LU (rows never move,
+    #    pivot order is an index vector — paper §7.3).
+    fact = p.execute(A)
+    err = float(np.abs(np.asarray(fact.reconstruct()) - A).max())
+    _, L, _ = fact.unpack()
     print(f"LU reconstruction |PA - LU|_max = {err:.2e}; max|L| = "
-          f"{float(jnp.abs(L).max()):.3f} (partial-pivot bounded)")
+          f"{float(np.abs(np.asarray(L)).max()):.3f} (partial-pivot bounded)")
 
-    x = lu_solve(F, rows, jnp.asarray(b))
-    print(f"solve residual |Ax-b|_max = {float(jnp.abs(A @ np.asarray(x) - b).max()):.2e}")
+    # 3. consume the Factorization: solves (single and batched multi-RHS),
+    #    determinants, comm accounting.
+    x = fact.solve(b)
+    print(f"solve residual |Ax-b|_max = {float(np.abs(A @ np.asarray(x) - b).max()):.2e}")
+    X = fact.solve(B)
+    print(f"multi-RHS (k=8) residual  = {float(np.abs(A @ np.asarray(X) - B).max()):.2e}")
+    s, ld = fact.slogdet()
+    s_np, ld_np = np.linalg.slogdet(A.astype(np.float64))
+    print(f"slogdet = ({float(s):+.0f}, {float(ld):.4f})  numpy: ({s_np:+.0f}, {ld_np:.4f})")
 
-    x2 = solve(A, b, distributed=False)
-    assert np.allclose(np.asarray(x), np.asarray(x2))
+    # 4. planning the same problem again is a cache hit — zero compiles.
+    p2 = plan(N, SolverConfig(strategy="auto"))
+    assert p2 is p and p.trace_count == 1
+    print(f"plan cache: {plan_cache_stats()} (traced once, reused)")
 
     # the paper's parallel I/O lower bound and COnfLUX's cost at cluster scale
     Nbig, P, c = 16384, 1024, 8

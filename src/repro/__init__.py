@@ -1,9 +1,11 @@
 """repro — COnfLUX (near-I/O-optimal parallel LU) + a production JAX LM framework.
 
 Public API:
+    repro.api             — plan/execute solver surface (strategy registry,
+                            cached compiled plans, Factorization results)
     repro.core.xpart      — parallel I/O lower-bound machinery (X-partitioning)
     repro.core.lu         — COnfLUX 2.5D LU, 2D baseline, cost models
-    repro.core.solve      — lu / lu_solve / det front-end
+    repro.core.solve      — deprecated lu / lu_solve / det shims over repro.api
     repro.analysis        — HLO collective counter + roofline
     repro.models          — assigned LM architectures
     repro.configs         — architecture & shape registries

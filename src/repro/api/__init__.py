@@ -1,0 +1,57 @@
+"""repro.api — the unified plan/execute solver surface.
+
+    from repro.api import SolverConfig, plan
+
+    cfg = SolverConfig(strategy="conflux", pivot="tournament")
+    p = plan(N, cfg)            # cached: traces/compiles once per key
+    fact = p.execute(A)         # Factorization
+    x = fact.solve(b)           # batched multi-RHS triangular solves
+    s, ld = fact.slogdet()
+    print(fact.comm_report())
+
+Strategies plug in through `@register_strategy("name")` — see
+`repro.api.strategies` for the built-ins (sequential / conflux /
+baseline2d / auto).  Plans are cached by (N, dtype, strategy, pivot,
+grid, v); `plan_cache_stats()` exposes hit/miss counters.
+"""
+
+from repro.api.config import SolverConfig
+from repro.api.plan import (
+    FactorizationPlan,
+    clear_plan_cache,
+    factor,
+    plan,
+    plan_cache_stats,
+    resolve,
+)
+from repro.api.registry import available_strategies, get_strategy, register_strategy
+from repro.api.result import Factorization
+from repro.core.lu.grid import GridConfig, optimize_grid, validate_layout
+
+import repro.api.strategies  # noqa: E402,F401  (registers the built-ins)
+
+
+def comm_volume(N: int, grid: GridConfig, pivot: str = "tournament") -> dict:
+    """Instrumented per-processor communication volume of the schedule."""
+    from repro.core.lu.conflux import lu_comm_volume
+
+    return lu_comm_volume(N, grid, pivot=pivot)
+
+
+__all__ = [
+    "SolverConfig",
+    "GridConfig",
+    "optimize_grid",
+    "validate_layout",
+    "FactorizationPlan",
+    "Factorization",
+    "plan",
+    "factor",
+    "resolve",
+    "plan_cache_stats",
+    "clear_plan_cache",
+    "register_strategy",
+    "get_strategy",
+    "available_strategies",
+    "comm_volume",
+]

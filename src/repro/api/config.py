@@ -1,0 +1,59 @@
+"""SolverConfig — the single declarative input to `repro.api.plan`.
+
+Everything that used to be scattered across call sites (a `distributed`
+bool, a `pivot` string, direct imports of a concrete factorization) is one
+frozen, hashable record.  `plan()` resolves it against the problem size and
+the available devices into a concrete `FactorizationPlan`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+from repro.core.lu.grid import GridConfig
+
+PIVOTS = ("tournament", "partial")
+
+
+@dataclass(frozen=True)
+class SolverConfig:
+    """Declarative solver selection.
+
+    strategy: a registered strategy name ("auto", "conflux", "baseline2d",
+        "sequential", ...).  "auto" runs Processor Grid Optimization over the
+        available devices and falls back to "sequential" on one device.
+    pivot:    "tournament" (COnfLUX butterfly) or "partial" (ScaLAPACK-style).
+    grid:     explicit GridConfig; None lets the strategy choose one.
+    dtype:    computation dtype (normalized to its numpy name, so configs hash).
+    M:        fast-memory budget per processor, in elements (drives the
+              replication factor c <= P*M/N^2 during grid optimization).
+    P_target: processor budget for grid selection; None = all local devices.
+    v:        panel width override; None lets the strategy/optimizer choose.
+    """
+
+    strategy: str = "auto"
+    pivot: str = "tournament"
+    grid: GridConfig | None = None
+    dtype: str = "float32"
+    M: float = 2.0**14
+    P_target: int | None = None
+    v: int | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "dtype", np.dtype(self.dtype).name)
+        if self.pivot not in PIVOTS:
+            raise ValueError(f"unknown pivot {self.pivot!r}; choose from {PIVOTS}")
+
+    def with_(self, **changes) -> "SolverConfig":
+        """Functional update (dataclasses.replace with validation rerun)."""
+        return replace(self, **changes)
+
+    def cache_key(self, N: int) -> tuple:
+        """Key identifying the compiled plan this config resolves to.
+
+        Only meaningful on a *resolved* config (concrete strategy + grid);
+        `plan()` resolves before keying.
+        """
+        return (N, self.dtype, self.strategy, self.pivot, self.grid, self.v)

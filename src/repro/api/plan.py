@@ -1,0 +1,156 @@
+"""plan/execute core: compiled FactorizationPlans and their registry cache.
+
+`plan(N, config)` resolves a `SolverConfig` to a concrete strategy + grid,
+then returns the cached `FactorizationPlan` for that key — building (and
+therefore tracing/jitting) one only on a cache miss.  The plan owns the
+mesh, the block-cyclic layout, and the jitted shard_map executable;
+`plan.execute(A)` runs without re-tracing.  Executing the same
+(N, dtype, strategy, pivot, grid) twice compiles exactly once — assert it
+with `plan.trace_count` or `plan_cache_stats()`.
+"""
+
+from __future__ import annotations
+
+import threading
+import warnings
+
+import numpy as np
+
+from repro.api.config import SolverConfig
+from repro.api.registry import get_strategy
+from repro.api.result import Factorization
+from repro.core.lu.grid import GridConfig
+
+
+class FactorizationPlan:
+    """A compiled, reusable factorization program for one (N, config).
+
+    Attributes:
+        N, config:     the resolved problem/strategy this plan was built for.
+        grid, mesh:    processor grid + jax Mesh (None on single device).
+        comm:          instrumented per-processor schedule volume (elements).
+        trace_count:   times the underlying program was traced/compiled.
+        execute_count: times `execute` ran (re-trace win = execute_count -
+                       trace_count extra runs at zero compile cost).
+    """
+
+    def __init__(self, N: int, config: SolverConfig, *, grid: GridConfig | None = None,
+                 mesh=None, comm: dict | None = None, run=None):
+        self.N = N
+        self.config = config
+        self.grid = grid
+        self.mesh = mesh
+        self.comm = dict(comm or {})
+        self.trace_count = 0
+        self.execute_count = 0
+        self._run = run  # (A: np.ndarray [N, N]) -> (F, rows); set by the builder
+
+    def _note_trace(self):
+        """Called from inside the traced program: fires once per compile."""
+        self.trace_count += 1
+
+    def execute(self, A) -> Factorization:
+        """Factorize A [N, N] with the compiled program (no re-trace)."""
+        A = np.asarray(A)
+        if A.dtype.kind == "f" and A.dtype.itemsize > np.dtype(self.config.dtype).itemsize:
+            warnings.warn(
+                f"plan computes in {self.config.dtype}; input {A.dtype} will be "
+                f"downcast (set SolverConfig.dtype to keep precision)",
+                stacklevel=2,
+            )
+        A = A.astype(self.config.dtype, copy=False)
+        if A.shape != (self.N, self.N):
+            raise ValueError(f"plan was built for N={self.N}, got A of shape {A.shape}")
+        F, rows = self._run(A)
+        self.execute_count += 1
+        return Factorization(
+            F=F, rows=rows, grid=self.grid, comm=dict(self.comm),
+            strategy=self.config.strategy,
+        )
+
+    def __repr__(self):
+        return (f"FactorizationPlan(N={self.N}, strategy={self.config.strategy!r}, "
+                f"pivot={self.config.pivot!r}, grid={self.grid}, "
+                f"traces={self.trace_count}, executes={self.execute_count})")
+
+
+_PLAN_CACHE: dict[tuple, FactorizationPlan] = {}
+_BUILDING: dict[tuple, threading.Event] = {}
+_STATS = {"hits": 0, "misses": 0}
+_LOCK = threading.Lock()
+
+
+def resolve(N: int, config: SolverConfig) -> SolverConfig:
+    """Resolve "auto"/missing-grid configs to a concrete strategy + grid."""
+    for _ in range(3):
+        builder = get_strategy(config.strategy)
+        resolver = getattr(builder, "resolve", None)
+        resolved = resolver(N, config) if resolver else config
+        if resolved.strategy == config.strategy:
+            return resolved
+        config = resolved
+    raise RuntimeError(f"strategy resolution did not converge for {config}")
+
+
+def plan(N: int, config: SolverConfig | None = None, *, mesh=None,
+         **overrides) -> FactorizationPlan:
+    """Get (or build) the compiled plan for factorizing N x N matrices.
+
+    `overrides` are SolverConfig fields, so `plan(256, strategy="conflux")`
+    works without constructing a config.  Passing an explicit `mesh`
+    bypasses the cache (meshes are caller-owned and unhashable).
+    """
+    config = config or SolverConfig()
+    if overrides:
+        config = config.with_(**overrides)
+    resolved = resolve(N, config)
+    builder = get_strategy(resolved.strategy)
+    if mesh is not None:
+        return builder(N, resolved, mesh=mesh)
+    key = resolved.cache_key(N)
+    while True:
+        with _LOCK:
+            cached = _PLAN_CACHE.get(key)
+            if cached is not None:
+                _STATS["hits"] += 1
+                return cached
+            pending = _BUILDING.get(key)
+            if pending is None:
+                # We own the build: others with the same key wait instead of
+                # paying a duplicate trace+compile.
+                _BUILDING[key] = pending = threading.Event()
+                _STATS["misses"] += 1
+                break
+        pending.wait()  # owner finished (or failed) — re-check the cache
+    try:
+        built = builder(N, resolved)
+        with _LOCK:
+            _PLAN_CACHE[key] = built
+        return built
+    finally:
+        with _LOCK:
+            _BUILDING.pop(key, None)
+        pending.set()
+
+
+def factor(A, config: SolverConfig | None = None, **overrides) -> Factorization:
+    """One-shot convenience: plan (cached) + execute.
+
+    With no explicit config/dtype, the computation dtype follows A (an
+    explicit SolverConfig states the contract and wins).
+    """
+    A = np.asarray(A)
+    if config is None and "dtype" not in overrides and A.dtype.kind == "f":
+        overrides["dtype"] = A.dtype.name
+    return plan(A.shape[0], config, **overrides).execute(A)
+
+
+def plan_cache_stats() -> dict:
+    with _LOCK:
+        return {**_STATS, "size": len(_PLAN_CACHE)}
+
+
+def clear_plan_cache() -> None:
+    with _LOCK:
+        _PLAN_CACHE.clear()
+        _STATS.update(hits=0, misses=0)

@@ -1,0 +1,102 @@
+"""Factorization — the one result type every strategy returns.
+
+Subsumes the old `LUResult` dataclass and the raw `(F, rows)` tuples: packed
+masked factors (rows never move, paper §7.3), the pivot order, the grid the
+factorization ran on, and the instrumented per-processor communication
+volume of the schedule.  Solves, determinants, and reconstruction are
+methods, each backed by a single module-level jitted program shared across
+instances (no per-result re-tracing).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lu.grid import GridConfig
+from repro.core.lu.sequential import permutation_sign, unpack_factors
+
+
+@jax.jit
+def _packed_solve(F, rows, b):
+    """x = U^-1 L^-1 P b from packed masked factors (PA = LU)."""
+    _, L, U = unpack_factors(F, rows)
+    pb = b[rows]
+    y = jax.scipy.linalg.solve_triangular(L, pb, lower=True, unit_diagonal=True)
+    return jax.scipy.linalg.solve_triangular(U, y, lower=False)
+
+
+@jax.jit
+def _packed_reconstruct(F, rows):
+    P, L, U = unpack_factors(F, rows)
+    return P.T @ (L @ U)
+
+
+@jax.jit
+def _packed_u_diag(F, rows):
+    n = F.shape[0]
+    return F[rows, jnp.arange(n)]
+
+
+@dataclass
+class Factorization:
+    """Packed masked LU factors plus everything needed to consume them."""
+
+    F: np.ndarray  # packed factors, original row positions [N, N]
+    rows: np.ndarray  # pivot order (global row ids) [N]
+    grid: GridConfig | None = None
+    comm: dict = field(default_factory=dict)
+    strategy: str = ""
+
+    @property
+    def N(self) -> int:
+        return int(np.asarray(self.F).shape[0])
+
+    @property
+    def dtype(self):
+        return np.asarray(self.F).dtype
+
+    def solve(self, b):
+        """Solve A x = b.  b: [N] single RHS or [N, k] multi-RHS batch.
+
+        One jitted triangular-solve pair shared by all Factorization
+        instances; a new RHS *shape* compiles once, then reuses.
+        """
+        b = jnp.asarray(b, dtype=self.dtype)
+        if b.ndim not in (1, 2) or b.shape[0] != self.N:
+            raise ValueError(
+                f"b must be [N] or [N, k] with N={self.N}, got shape {b.shape}"
+            )
+        return _packed_solve(jnp.asarray(self.F), jnp.asarray(self.rows), b)
+
+    def slogdet(self):
+        """(sign, log|det|) — overflow-safe; vectorized permutation sign."""
+        d = _packed_u_diag(jnp.asarray(self.F), jnp.asarray(self.rows))
+        sign = permutation_sign(self.rows)
+        return sign * jnp.prod(jnp.sign(d)), jnp.sum(jnp.log(jnp.abs(d)))
+
+    def det(self):
+        s, ld = self.slogdet()
+        return s * jnp.exp(ld)
+
+    def reconstruct(self):
+        """Rebuild A (original row order) from the packed factors."""
+        return _packed_reconstruct(jnp.asarray(self.F), jnp.asarray(self.rows))
+
+    def unpack(self):
+        """(P, L, U) with P @ A = L @ U."""
+        return unpack_factors(jnp.asarray(self.F), jnp.asarray(self.rows))
+
+    def comm_report(self) -> str:
+        """Human-readable instrumented communication volume (elements/proc)."""
+        head = f"strategy={self.strategy or '?'} grid={self.grid} N={self.N}"
+        if not self.comm:
+            return f"{head}\n  single-device: no inter-processor communication"
+        lines = [head]
+        for k, val in self.comm.items():
+            if isinstance(val, (int, float)):
+                lines.append(f"  {k:20s} {val:14,.0f}")
+        return "\n".join(lines)

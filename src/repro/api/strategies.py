@@ -1,0 +1,201 @@
+"""Built-in strategies: sequential, conflux, baseline2d, auto.
+
+Each strategy is a plan builder ``(N, config, mesh=None) -> FactorizationPlan``
+plus an attached ``resolve(N, config) -> SolverConfig`` hook that pins the
+open choices (grid, panel width, pivot) so the plan cache key is concrete.
+Heavy modules (the shard_map program) are imported inside the builders so
+`repro.api` stays import-light and cycle-free.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import SolverConfig
+from repro.api.plan import FactorizationPlan
+from repro.api.registry import register_strategy
+from repro.core.lu.grid import optimize_grid, validate_layout
+
+# ---------------------------------------------------------------------------
+# sequential — single-device masked LU (the jnp oracle).
+# ---------------------------------------------------------------------------
+
+
+def default_panel_width(N: int, start: int = 32) -> int:
+    """Largest v <= min(start, N) dividing N (the legacy shrink rule)."""
+    v = min(start, N)
+    while N % v:
+        v -= 1
+    return v
+
+
+def _resolve_sequential(N: int, config: SolverConfig) -> SolverConfig:
+    v = config.v
+    if v is None:
+        v = default_panel_width(N)
+    elif not 1 <= v <= N or N % v:
+        raise ValueError(
+            f"sequential strategy needs a panel width dividing N: v={v}, N={N}"
+        )
+    return config.with_(v=v, grid=None)
+
+
+@register_strategy("sequential")
+def build_sequential(N: int, config: SolverConfig, mesh=None) -> FactorizationPlan:
+    from repro.core.lu.sequential import lu_masked_sequential
+
+    v = config.v
+    p = FactorizationPlan(N, config)
+
+    def _traced(A):
+        p._note_trace()
+        return lu_masked_sequential(A, v=v)
+
+    fn = jax.jit(_traced)
+
+    def run(A):
+        F, rows = fn(jnp.asarray(A))
+        return np.asarray(F), np.asarray(rows).astype(np.int64)
+
+    p._run = run
+    return p
+
+
+build_sequential.resolve = _resolve_sequential
+
+
+# ---------------------------------------------------------------------------
+# conflux — the 2.5D near-communication-optimal schedule (paper §7).
+# ---------------------------------------------------------------------------
+
+
+def _resolve_conflux(N: int, config: SolverConfig) -> SolverConfig:
+    if config.grid is not None:
+        return config
+    P_target = config.P_target or len(jax.devices())
+    grid = optimize_grid(N, P_target, config.M, v=config.v)
+    return config.with_(grid=grid)
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    """shard_map across jax versions: new jax exposes it at the top level
+    (replication check flag `check_vma`), 0.4.x under jax.experimental
+    (`check_rep`)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+
+
+def _build_shardmap_plan(N: int, config: SolverConfig, mesh=None) -> FactorizationPlan:
+    """Shared builder for every block-cyclic shard_map strategy."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.lu.conflux import (
+        _local_lu,
+        block_cyclic_gather,
+        block_cyclic_scatter,
+        lu_comm_volume,
+        make_lu_mesh,
+    )
+
+    grid = config.grid
+    if grid is None:
+        raise ValueError(f"strategy {config.strategy!r} needs a resolved grid")
+    validate_layout(N, grid, pivot=config.pivot)
+    mesh = mesh or make_lu_mesh(grid)
+    p = FactorizationPlan(
+        N, config, grid=grid, mesh=mesh,
+        comm=lu_comm_volume(N, grid, pivot=config.pivot),
+    )
+
+    def _traced(blocks):
+        p._note_trace()
+        return _local_lu(grid, config.pivot, blocks)
+
+    fn = jax.jit(
+        _shard_map(
+            _traced,
+            mesh=mesh,
+            in_specs=P("px", "py", None, None),
+            out_specs=(P("px", "py", None, None), P()),
+        )
+    )
+
+    def run(A):
+        blocks = block_cyclic_scatter(A, grid.Px, grid.Py, grid.v)
+        Fblocks, rows = fn(blocks)
+        F = block_cyclic_gather(np.asarray(Fblocks), N, grid.v)
+        return F, np.asarray(rows).astype(np.int64)
+
+    p._run = run
+    return p
+
+
+@register_strategy("conflux")
+def build_conflux(N: int, config: SolverConfig, mesh=None) -> FactorizationPlan:
+    return _build_shardmap_plan(N, config, mesh=mesh)
+
+
+build_conflux.resolve = _resolve_conflux
+
+
+# ---------------------------------------------------------------------------
+# baseline2d — ScaLAPACK/LibSci-style 2D grid with partial pivoting (§8).
+# ---------------------------------------------------------------------------
+
+
+def _resolve_baseline2d(N: int, config: SolverConfig) -> SolverConfig:
+    from repro.core.lu.baseline2d import scalapack2d_grid
+
+    changes: dict = {}
+    if config.pivot != "partial":
+        changes["pivot"] = "partial"  # the 2D baseline is defined by it
+    if config.grid is None:
+        P_target = config.P_target or len(jax.devices())
+        changes["grid"] = scalapack2d_grid(N, P_target, v=config.v or 32)
+    return config.with_(**changes) if changes else config
+
+
+@register_strategy("baseline2d")
+def build_baseline2d(N: int, config: SolverConfig, mesh=None) -> FactorizationPlan:
+    return _build_shardmap_plan(N, config, mesh=mesh)
+
+
+build_baseline2d.resolve = _resolve_baseline2d
+
+
+# ---------------------------------------------------------------------------
+# auto — Processor Grid Optimization, sequential fallback on one device.
+# ---------------------------------------------------------------------------
+
+
+def _resolve_auto(N: int, config: SolverConfig) -> SolverConfig:
+    n_dev = len(jax.devices())
+    if config.grid is not None:
+        if n_dev < config.grid.P_used:
+            raise ValueError(
+                f"auto: explicit grid {config.grid} needs {config.grid.P_used} "
+                f"devices but only {n_dev} are available; drop the grid to let "
+                f"auto choose, or use strategy='sequential'"
+            )
+        return config.with_(strategy="conflux")
+    if n_dev > 1:
+        try:
+            grid = optimize_grid(N, config.P_target or n_dev, config.M, v=config.v)
+            return config.with_(strategy="conflux", grid=grid)
+        except ValueError:
+            pass  # no feasible distributed grid: fall through to sequential
+    return _resolve_sequential(N, config.with_(strategy="sequential", grid=None))
+
+
+@register_strategy("auto")
+def build_auto(N: int, config: SolverConfig, mesh=None) -> FactorizationPlan:
+    raise RuntimeError("'auto' resolves to a concrete strategy before building")
+
+
+build_auto.resolve = _resolve_auto

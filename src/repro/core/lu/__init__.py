@@ -4,9 +4,10 @@ from repro.core.lu.sequential import (
     masked_lup,
     lu_masked_sequential,
     unpack_factors,
+    permutation_sign,
     reconstruct,
 )
-from repro.core.lu.grid import GridConfig, optimize_grid
+from repro.core.lu.grid import GridConfig, optimize_grid, validate_layout
 from repro.core.lu.cost_models import (
     conflux_model,
     candmc_model,
@@ -14,15 +15,18 @@ from repro.core.lu.cost_models import (
     slate_model,
     COMM_MODELS,
 )
-from repro.core.lu.conflux import conflux_lu, distributed_lu, lu_comm_volume
+from repro.core.lu.conflux import LUResult, conflux_lu, distributed_lu, lu_comm_volume
 
 __all__ = [
     "masked_lup",
     "lu_masked_sequential",
     "unpack_factors",
+    "permutation_sign",
     "reconstruct",
     "GridConfig",
     "optimize_grid",
+    "validate_layout",
+    "LUResult",
     "conflux_model",
     "candmc_model",
     "scalapack2d_model",

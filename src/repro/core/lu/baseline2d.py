@@ -14,7 +14,7 @@ import math
 
 import numpy as np
 
-from repro.core.lu.conflux import LUResult, conflux_lu
+from repro.api.result import Factorization
 from repro.core.lu.grid import GridConfig
 
 
@@ -29,11 +29,17 @@ def scalapack2d_grid(N: int, P: int, v: int = 32) -> GridConfig:
     return GridConfig(Px=Px, Py=Py, c=1, v=v, N=N)
 
 
-def scalapack2d_lu(A, P_target: int | None = None, v: int = 32, mesh=None) -> LUResult:
-    """2D block-cyclic LU with partial pivoting (the LibSci/SLATE stand-in)."""
-    import jax
+def scalapack2d_lu(A, P_target: int | None = None, v: int = 32, mesh=None) -> Factorization:
+    """2D block-cyclic LU with partial pivoting (the LibSci/SLATE stand-in).
+
+    Deprecated shim over `repro.api.plan` (strategy "baseline2d"): the
+    compiled plan is cached and reused across calls.
+    """
+    from repro.api import SolverConfig, plan
 
     A = np.asarray(A)
-    P_target = P_target or len(jax.devices())
-    grid = scalapack2d_grid(A.shape[0], P_target, v=v)
-    return conflux_lu(A, grid=grid, mesh=mesh, pivot="partial")
+    cfg = SolverConfig(
+        strategy="baseline2d", pivot="partial", dtype=A.dtype.name,
+        P_target=P_target, v=v,
+    )
+    return plan(A.shape[0], cfg, mesh=mesh).execute(A)

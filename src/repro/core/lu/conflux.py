@@ -34,18 +34,21 @@ real TPU deployment the conditional schedule compiles and runs as-is.
 
 from __future__ import annotations
 
-import functools
 import math
-from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
+from repro.api.result import Factorization
 from repro.core.lu.cost_models import conflux_model
-from repro.core.lu.grid import GridConfig, optimize_grid
+from repro.core.lu.grid import GridConfig
 from repro.core.lu.sequential import masked_lup
+
+# Deprecated alias: `Factorization` (repro.api.result) subsumes the old
+# LUResult dataclass — same F / rows / grid / comm fields, plus solve(),
+# slogdet(), reconstruct(), comm_report().
+LUResult = Factorization
 
 
 # ---------------------------------------------------------------------------
@@ -225,14 +228,6 @@ def _local_lu(cfg: GridConfig, pivot: str, Aloc):
     return Floc[None, None], rows
 
 
-@dataclass
-class LUResult:
-    F: np.ndarray  # packed factors, original row positions [N, N]
-    rows: np.ndarray  # pivot order (global row ids) [N]
-    grid: GridConfig
-    comm: dict = field(default_factory=dict)
-
-
 def make_lu_mesh(cfg: GridConfig, devices=None) -> jax.sharding.Mesh:
     devices = devices if devices is not None else jax.devices()
     need = cfg.Px * cfg.Py * cfg.c
@@ -243,35 +238,26 @@ def make_lu_mesh(cfg: GridConfig, devices=None) -> jax.sharding.Mesh:
 
 
 def conflux_lu(A, grid: GridConfig | None = None, P_target: int | None = None,
-               M: float = 2**14, mesh=None, pivot: str = "tournament") -> LUResult:
+               M: float = 2**14, mesh=None, pivot: str = "tournament") -> Factorization:
     """Factorize A (N x N) with the COnfLUX schedule on available devices.
 
-    Returns packed masked factors + pivot order (see sequential.unpack_factors)
-    and the instrumented per-processor communication volume of the schedule.
+    Deprecated shim over `repro.api.plan`: the shard_map program is built
+    (traced + jitted) once per (N, dtype, grid, pivot) and reused from the
+    plan cache on every later call.  Returns a `Factorization` — packed
+    masked factors + pivot order (see sequential.unpack_factors) and the
+    instrumented per-processor communication volume of the schedule.
     """
+    from repro.api import SolverConfig, plan
+
     A = np.asarray(A)
-    N = A.shape[0]
-    if grid is None:
-        P_target = P_target or len(jax.devices())
-        grid = optimize_grid(N, P_target, M)
-    mesh = mesh or make_lu_mesh(grid)
-    blocks = block_cyclic_scatter(A, grid.Px, grid.Py, grid.v)
-    fn = jax.jit(
-        jax.shard_map(
-            functools.partial(_local_lu, grid, pivot),
-            mesh=mesh,
-            in_specs=P("px", "py", None, None),
-            out_specs=(P("px", "py", None, None), P()),
-            check_vma=False,
-        )
+    cfg = SolverConfig(
+        strategy="conflux", pivot=pivot, grid=grid, dtype=A.dtype.name,
+        M=float(M), P_target=P_target,
     )
-    Fblocks, rows = fn(blocks)
-    F = block_cyclic_gather(np.asarray(Fblocks), N, grid.v)
-    rows = np.asarray(rows).astype(np.int64)
-    return LUResult(F=F, rows=rows, grid=grid, comm=lu_comm_volume(N, grid, pivot=pivot))
+    return plan(A.shape[0], cfg, mesh=mesh).execute(A)
 
 
-def distributed_lu(A, **kw) -> LUResult:
+def distributed_lu(A, **kw) -> Factorization:
     """Public entry point with automatic Processor Grid Optimization."""
     return conflux_lu(A, **kw)
 

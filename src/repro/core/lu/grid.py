@@ -33,6 +33,36 @@ class GridConfig:
         return f"[{self.Px}x{self.Py}x{self.c}] v={self.v} (P_used={self.P_used})"
 
 
+def validate_layout(N: int, grid: GridConfig, pivot: str = "tournament") -> None:
+    """Check the static block-cyclic layout constraints up front.
+
+    Raises ValueError with an actionable message instead of letting the
+    violation surface as a shape error deep inside `block_cyclic_scatter`
+    or shard_map tracing.
+    """
+    Px, Py, c, v = grid.Px, grid.Py, grid.c, grid.v
+    if min(Px, Py, c, v) < 1:
+        raise ValueError(f"grid {grid}: Px, Py, c, v must all be >= 1")
+    if grid.N != N:
+        raise ValueError(
+            f"grid {grid} was built for N={grid.N} but the matrix has N={N}; "
+            f"rebuild the grid (or the plan) for this problem size"
+        )
+    if pivot == "tournament" and Px & (Px - 1):
+        raise ValueError(
+            f"grid {grid}: Px={Px} must be a power of two — the tournament "
+            f"butterfly pairs ranks px XOR 2^r; use Px in "
+            f"{{{', '.join(str(2**k) for k in range(4))}, ...}} or pivot='partial'"
+        )
+    for axis, p in (("Px", Px), ("Py", Py)):
+        if N % (v * p):
+            raise ValueError(
+                f"grid {grid}: N={N} must be divisible by v*{axis}={v * p} for the "
+                f"static v x v tile-block-cyclic layout (no ragged tiles); pick a "
+                f"panel width v dividing {N // p if N % p == 0 else N} or pad N"
+            )
+
+
 def _pow2_divisors_leq(n: int, cap: int):
     d = 1
     while d <= cap:
@@ -84,5 +114,11 @@ def optimize_grid(
                 if best is None or cost < best[0]:
                     best = (cost, cfg)
     if best is None:
-        raise ValueError(f"no feasible grid for N={N}, P={P}, M={M}")
+        hint = (
+            f" with fixed v={v} (no power-of-two grid satisfies N % (v*Px) == 0 "
+            f"and N % (v*Py) == 0; drop the v override or pick a divisor of {N})"
+            if v
+            else f" (the local share N^2*c/P must fit in M={M:g}; raise M or P)"
+        )
+        raise ValueError(f"no feasible grid for N={N}, P={P}, M={M:g}{hint}")
     return best[1]

@@ -1,34 +1,72 @@
-"""Public linear-algebra front-end built on COnfLUX (paper §7).
+"""Deprecated linear-algebra front-end — thin shims over `repro.api`.
 
-`lu_factor` picks the COnfLUX 2.5D schedule when multiple devices are
-available and falls back to the sequential masked LU otherwise; `lu_solve`
-and `det` consume the packed masked factors.
+These entry points predate the plan/execute redesign and are kept so old
+imports keep working.  New code should use:
+
+    from repro.api import SolverConfig, plan
+    fact = plan(N, SolverConfig(strategy="auto")).execute(A)
+    x = fact.solve(b); s, ld = fact.slogdet()
+
+The shims route through the cached plan registry, so repeated calls with
+the same (N, dtype, strategy, pivot, grid) no longer re-trace/re-jit.
 """
 
 from __future__ import annotations
+
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.lu.sequential import lu_masked_sequential, unpack_factors
+from repro.core.lu.sequential import unpack_factors
+
+
+def _warn(name: str):
+    warnings.warn(
+        f"repro.core.solve.{name} is deprecated; use repro.api.plan/"
+        f"Factorization instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def _factorize(A, v: int = 32, distributed: bool | None = None, **kw):
+    """Shared shim body: map the legacy knobs onto a SolverConfig."""
+    from repro.api import SolverConfig, plan
+    from repro.api.strategies import default_panel_width
+
+    A = np.asarray(A)
+    N = A.shape[0]
+    mesh = kw.pop("mesh", None)
+    if distributed is None:
+        strategy = "auto"
+    elif distributed:
+        strategy = "conflux"
+    else:
+        strategy = "sequential"
+    grid = kw.pop("grid", None)
+    if strategy == "auto" and grid is not None and len(jax.devices()) < grid.P_used:
+        grid = None  # legacy lu_factor silently ran sequential in this case
+    cfg = SolverConfig(
+        strategy=strategy,
+        pivot=kw.pop("pivot", "tournament"),
+        grid=grid,
+        dtype=A.dtype.name if A.dtype.kind == "f" else "float32",
+        M=float(kw.pop("M", 2.0**14)),
+        P_target=kw.pop("P_target", None),
+        v=default_panel_width(N, start=v) if strategy in ("sequential", "auto") else None,
+    )
+    if kw:
+        raise TypeError(f"unknown lu_factor arguments: {sorted(kw)}")
+    return plan(N, cfg, mesh=mesh).execute(A)
 
 
 def lu_factor(A, v: int = 32, distributed: bool | None = None, **kw):
     """Masked LU of A.  Returns (F, rows): packed factors + pivot order."""
-    A = jnp.asarray(A)
-    n_dev = len(jax.devices())
-    if distributed is None:
-        distributed = n_dev > 1 and A.shape[0] % (v * 2) == 0
-    if distributed:
-        from repro.core.lu.conflux import distributed_lu
-
-        res = distributed_lu(np.asarray(A), **kw)
-        return jnp.asarray(res.F), jnp.asarray(res.rows)
-    vv = min(v, A.shape[0])
-    while A.shape[0] % vv:  # panel width must divide N
-        vv -= 1
-    return lu_masked_sequential(A, v=vv)
+    _warn("lu_factor")
+    fact = _factorize(A, v=v, distributed=distributed, **kw)
+    return jnp.asarray(fact.F), jnp.asarray(fact.rows)
 
 
 def lu_solve(F, rows, b):
@@ -40,35 +78,18 @@ def lu_solve(F, rows, b):
 
 
 def solve(A, b, **kw):
-    """Direct dense solve via COnfLUX."""
-    F, rows = lu_factor(A, **kw)
-    return lu_solve(F, rows, b)
+    """Direct dense solve via the cached solver plans."""
+    _warn("solve")
+    return _factorize(A, **kw).solve(b)
 
 
 def slogdet(A, **kw):
     """(sign, log|det|) from the masked factors (overflow-safe)."""
-    F, rows = lu_factor(A, **kw)
-    _, _, U = unpack_factors(F, rows)
-    d = jnp.diag(U)
-    rows_np = np.asarray(rows)
-    n = len(rows_np)
-    # permutation sign by cycle decomposition of the pivot order
-    seen = np.zeros(n, bool)
-    sign = 1.0
-    for i in range(n):
-        if seen[i]:
-            continue
-        j, clen = i, 0
-        while not seen[j]:
-            seen[j] = True
-            j = int(rows_np[j])
-            clen += 1
-        if clen % 2 == 0:
-            sign = -sign
-    return sign * jnp.prod(jnp.sign(d)), jnp.sum(jnp.log(jnp.abs(d)))
+    _warn("slogdet")
+    return _factorize(A, **kw).slogdet()
 
 
 def det(A, **kw):
     """Determinant (use slogdet for large N to avoid overflow)."""
-    s, ld = slogdet(A, **kw)
-    return s * jnp.exp(ld)
+    _warn("det")
+    return _factorize(A, **kw).det()

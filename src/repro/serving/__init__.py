@@ -1,5 +1,6 @@
-"""Serving: static-batch engine over prefill + decode steps."""
+"""Serving: static-batch LM engine + plan-cached linear-algebra solves."""
 
 from repro.serving.engine import ServeEngine, SamplerConfig
+from repro.serving.solve_engine import SolveEngine
 
-__all__ = ["ServeEngine", "SamplerConfig"]
+__all__ = ["ServeEngine", "SamplerConfig", "SolveEngine"]

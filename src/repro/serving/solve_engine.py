@@ -1,0 +1,81 @@
+"""SolveEngine — serving-scale repeated dense solves on one cached plan.
+
+The serving story for linear algebra mirrors the LM engine next door:
+traffic is many requests of the *same shape* (covariance solves, KKT
+systems, Gaussian-process updates ...), so the expensive parts — grid
+optimization, mesh construction, shard_map tracing, XLA compilation — are
+paid once at engine construction and every request runs the compiled plan.
+
+    eng = SolveEngine(N=4096, config=SolverConfig(strategy="auto"))
+    x = eng.solve(A, b)            # factorize + solve
+    x2 = eng.resolve(b2)           # new RHS, reuse the last factorization
+    print(eng.stats())
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.api import Factorization, SolverConfig, plan, plan_cache_stats
+
+
+class SolveEngine:
+    """Repeated same-shape factorize/solve traffic over one compiled plan."""
+
+    def __init__(self, N: int, config: SolverConfig | None = None, **overrides):
+        self.config = (config or SolverConfig()).with_(**overrides)
+        self.plan = plan(N, self.config)
+        self.N = N
+        self._last: Factorization | None = None
+        self._n_factor = 0
+        self._n_solve = 0
+        self._t_factor = 0.0
+        self._t_solve = 0.0
+
+    def factor(self, A) -> Factorization:
+        """Factorize one N x N system on the compiled plan."""
+        t0 = time.perf_counter()
+        fact = self.plan.execute(A)
+        self._t_factor += time.perf_counter() - t0
+        self._n_factor += 1
+        self._last = fact
+        return fact
+
+    def solve(self, A, b):
+        """Factorize A and solve A x = b (b: [N] or [N, k] multi-RHS)."""
+        fact = self.factor(A)
+        t0 = time.perf_counter()
+        x = fact.solve(b)
+        self._t_solve += time.perf_counter() - t0
+        self._n_solve += 1
+        return x
+
+    def resolve(self, b):
+        """Solve against the most recent factorization (no re-factorize)."""
+        if self._last is None:
+            raise RuntimeError("no factorization yet; call factor() or solve() first")
+        t0 = time.perf_counter()
+        x = self._last.solve(b)
+        self._t_solve += time.perf_counter() - t0
+        self._n_solve += 1
+        return x
+
+    def solve_many(self, systems):
+        """[(A, b), ...] -> [x, ...] — a request batch on one plan."""
+        return [np.asarray(self.solve(A, b)) for A, b in systems]
+
+    def stats(self) -> dict:
+        """Engine counters + the global plan-cache hit/miss trajectory."""
+        return {
+            "N": self.N,
+            "strategy": self.plan.config.strategy,
+            "grid": str(self.plan.grid),
+            "factorizations": self._n_factor,
+            "solves": self._n_solve,
+            "trace_count": self.plan.trace_count,
+            "factor_s_total": round(self._t_factor, 6),
+            "solve_s_total": round(self._t_solve, 6),
+            "plan_cache": plan_cache_stats(),
+        }

@@ -51,6 +51,27 @@ def main():
 
     res = distributed_lu(A, M=2048.0)
     check(res, A, f"auto-grid {res.grid}")
+
+    # plan/execute API on the full device count: cached plan, single trace,
+    # multi-RHS solve vs numpy.
+    from repro.api import GridConfig as GC, SolverConfig, plan, plan_cache_stats
+
+    N = 128
+    cfg = SolverConfig(strategy="conflux", grid=GC(Px=2, Py=2, c=2, v=16, N=N))
+    A = rng.standard_normal((N, N)).astype(np.float32)
+    B = rng.standard_normal((N, 5)).astype(np.float32)
+    p = plan(N, cfg)
+    f1 = p.execute(A)
+    hits0 = plan_cache_stats()["hits"]
+    p2 = plan(N, cfg)  # same key: must be a pure cache hit
+    f2 = p2.execute(A)
+    assert p is p2 and p.trace_count == 1, (p.trace_count, p is p2)
+    assert plan_cache_stats()["hits"] == hits0 + 1
+    X = np.asarray(f2.solve(B))
+    X_np = np.linalg.solve(A.astype(np.float64), B.astype(np.float64))
+    assert np.abs(X - X_np).max() < 5e-3, np.abs(X - X_np).max()
+    print(f"PASS api-plan {p.grid} traces={p.trace_count} "
+          f"solve_err={np.abs(A @ X - B).max():.2e}")
     print("ALL-OK")
 
 

@@ -1,0 +1,61 @@
+"""optimize_grid edge cases: infeasibility, processor idling, fixed-v."""
+
+import pytest
+
+from repro.core.lu.grid import GridConfig, optimize_grid, validate_layout
+
+
+class TestOptimizeGridEdges:
+    def test_infeasible_memory_raises(self):
+        """Local share N^2*c/P can never fit in M => clean ValueError."""
+        with pytest.raises(ValueError, match="no feasible grid"):
+            optimize_grid(N=1024, P=4, M=1000.0)  # N^2/4 = 262144 >> M
+
+    def test_fixed_v_dividing_nothing_rejected(self):
+        """A v override that divides no layout is rejected with the v named."""
+        with pytest.raises(ValueError, match="v=48"):
+            optimize_grid(N=4096, P=64, M=1e9, v=48)
+
+    def test_max_waste_idles_processors_when_it_helps(self):
+        """Power-of-two grids cannot use P=12 fully; with max_waste the
+        optimizer idles 4 ranks, without it there is no feasible grid (the
+        paper: greedy full-utilization finds suboptimal decompositions)."""
+        g = optimize_grid(N=256, P=12, M=1e9, max_waste=0.5)
+        assert g.P_used == 8 < 12
+        with pytest.raises(ValueError, match="no feasible grid"):
+            optimize_grid(N=256, P=12, M=1e9, max_waste=0.0)
+
+    def test_full_power_of_two_budget_fully_used(self):
+        g = optimize_grid(N=256, P=8, M=1e9, max_waste=0.0)
+        assert g.P_used == 8
+
+    def test_replication_grows_with_memory(self):
+        N, P = 8192, 512
+        g_small = optimize_grid(N, P, M=N * N / P * 1.01)
+        g_big = optimize_grid(N, P, M=N * N / P * 16)
+        assert g_big.c >= g_small.c > 0
+        assert g_big.c > 1
+
+    def test_result_satisfies_layout_constraints(self):
+        g = optimize_grid(N=512, P=16, M=1e9)
+        validate_layout(512, g)  # must not raise
+        assert g.N == 512 and g.P_used <= 16
+
+
+class TestValidateLayout:
+    def test_ok_grid_passes(self):
+        validate_layout(128, GridConfig(Px=2, Py=2, c=2, v=16, N=128))
+
+    def test_partial_pivot_allows_nonpow2_px(self):
+        validate_layout(96, GridConfig(Px=3, Py=1, c=1, v=16, N=96), pivot="partial")
+        with pytest.raises(ValueError, match="power of two"):
+            validate_layout(96, GridConfig(Px=3, Py=1, c=1, v=16, N=96), pivot="tournament")
+
+    def test_py_layout_checked(self):
+        # v*Px = 8 divides N=96 but v*Py = 64 does not.
+        with pytest.raises(ValueError, match=r"v\*Py"):
+            validate_layout(96, GridConfig(Px=1, Py=8, c=1, v=8, N=96))
+
+    def test_degenerate_grid_rejected(self):
+        with pytest.raises(ValueError, match=">= 1"):
+            validate_layout(64, GridConfig(Px=0, Py=1, c=1, v=8, N=64))

@@ -1,0 +1,239 @@
+"""Unified plan/execute solver API: registry, plan cache, Factorization."""
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    Factorization,
+    GridConfig,
+    SolverConfig,
+    available_strategies,
+    clear_plan_cache,
+    factor,
+    plan,
+    plan_cache_stats,
+    register_strategy,
+    resolve,
+)
+from repro.serving.solve_engine import SolveEngine
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(n, k=None):
+    shape = (n, n) if k is None else (n, k)
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+# Single-device configs exercising every registered strategy, including the
+# shard_map path (1x1x1 grid collapses the collectives to self-reductions).
+def _all_strategy_configs(N):
+    return [
+        SolverConfig(strategy="sequential"),
+        SolverConfig(strategy="conflux", grid=GridConfig(Px=1, Py=1, c=1, v=8, N=N)),
+        SolverConfig(strategy="baseline2d", P_target=1, v=8),
+        SolverConfig(strategy="auto"),
+    ]
+
+
+class TestPlanCache:
+    def test_same_key_traces_exactly_once(self):
+        """Acceptance: same (N, dtype, strategy, pivot, grid) twice =>
+        one trace/compile, the second plan() is a cache hit."""
+        clear_plan_cache()
+        N = 32
+        cfg = SolverConfig(strategy="sequential")
+        p1 = plan(N, cfg)
+        p1.execute(_rand(N))
+        p2 = plan(N, cfg)
+        p2.execute(_rand(N))
+        assert p1 is p2
+        assert p1.trace_count == 1
+        assert p1.execute_count == 2
+        stats = plan_cache_stats()
+        assert stats["hits"] == 1 and stats["misses"] == 1
+
+    def test_shardmap_plan_traces_exactly_once(self):
+        clear_plan_cache()
+        N = 32
+        cfg = SolverConfig(strategy="conflux", grid=GridConfig(Px=1, Py=1, c=1, v=8, N=N))
+        plan(N, cfg).execute(_rand(N))
+        p = plan(N, cfg)
+        p.execute(_rand(N))
+        assert p.trace_count == 1 and p.execute_count == 2
+        assert plan_cache_stats()["hits"] == 1
+
+    def test_different_keys_get_different_plans(self):
+        clear_plan_cache()
+        N = 32
+        p8 = plan(N, SolverConfig(strategy="sequential", v=8))
+        p16 = plan(N, SolverConfig(strategy="sequential", v=16))
+        p64 = plan(64, SolverConfig(strategy="sequential", v=8))
+        assert p8 is not p16 and p8 is not p64
+        assert plan_cache_stats()["misses"] == 3
+
+    def test_auto_resolves_to_cached_concrete_plan(self):
+        clear_plan_cache()
+        N = 32
+        pa = plan(N, SolverConfig(strategy="auto"))
+        assert pa.config.strategy in ("sequential", "conflux")
+        assert plan(N, SolverConfig(strategy="auto")) is pa
+        assert plan_cache_stats()["hits"] == 1
+
+    def test_plan_kwarg_overrides(self):
+        p = plan(32, strategy="sequential", v=16)
+        assert p.config.v == 16
+
+
+class TestFactorizationCorrectness:
+    @pytest.mark.parametrize("idx", range(4))
+    def test_multirhs_solve_matches_numpy(self, idx):
+        """Acceptance: Factorization.solve on a multi-RHS batch matches
+        numpy.linalg.solve to fp32 tolerance for all registered strategies."""
+        N, k = 64, 7
+        cfg = _all_strategy_configs(N)[idx]
+        A, B = _rand(N), _rand(N, k)
+        fact = factor(A, cfg)
+        X = np.asarray(fact.solve(B))
+        X_np = np.linalg.solve(A.astype(np.float64), B.astype(np.float64))
+        assert np.abs(X - X_np).max() < 5e-3
+        assert np.abs(A @ X - B).max() < 5e-4
+
+    def test_all_builtin_strategies_registered(self):
+        assert {"auto", "conflux", "baseline2d", "sequential"} <= set(available_strategies())
+
+    def test_single_rhs_and_det(self):
+        N = 48
+        A, b = _rand(N), RNG.standard_normal(N).astype(np.float32)
+        fact = factor(A, SolverConfig(strategy="sequential"))
+        x = np.asarray(fact.solve(b))
+        assert np.abs(A @ x - b).max() < 5e-4
+        s, ld = fact.slogdet()
+        s_np, ld_np = np.linalg.slogdet(A.astype(np.float64))
+        assert float(s) == pytest.approx(s_np)
+        assert float(ld) == pytest.approx(ld_np, rel=1e-3)
+        assert float(fact.det()) == pytest.approx(s_np * np.exp(ld_np), rel=1e-2)
+
+    def test_reconstruct_and_comm_report(self):
+        N = 32
+        A = _rand(N)
+        fact = factor(A, SolverConfig(strategy="conflux",
+                                      grid=GridConfig(Px=1, Py=1, c=1, v=8, N=N)))
+        assert isinstance(fact, Factorization)
+        assert np.abs(np.asarray(fact.reconstruct()) - A).max() < 5e-5
+        report = fact.comm_report()
+        assert "conflux" in report and "total" in report
+
+    def test_solve_rejects_bad_rhs_shape(self):
+        fact = factor(_rand(32), SolverConfig(strategy="sequential"))
+        with pytest.raises(ValueError, match="N=32"):
+            fact.solve(np.zeros(16, np.float32))
+
+
+class TestValidation:
+    def test_layout_violation_rejected_at_plan_time(self):
+        N = 64
+        with pytest.raises(ValueError, match=r"divisible by v\*Px"):
+            plan(N, SolverConfig(strategy="conflux",
+                                 grid=GridConfig(Px=2, Py=1, c=1, v=24, N=N)))
+
+    def test_nonpow2_px_rejected_for_tournament(self):
+        N = 96
+        with pytest.raises(ValueError, match="power of two"):
+            plan(N, SolverConfig(strategy="conflux",
+                                 grid=GridConfig(Px=3, Py=1, c=1, v=8, N=N)))
+
+    def test_grid_built_for_other_N_rejected(self):
+        with pytest.raises(ValueError, match="N=64"):
+            plan(64, SolverConfig(strategy="conflux",
+                                  grid=GridConfig(Px=1, Py=1, c=1, v=8, N=32)))
+
+    def test_unknown_strategy_lists_available(self):
+        with pytest.raises(KeyError, match="conflux"):
+            plan(32, SolverConfig(strategy="does-not-exist"))
+
+    def test_unknown_pivot_rejected(self):
+        with pytest.raises(ValueError, match="pivot"):
+            SolverConfig(pivot="rook")
+
+    def test_wrong_matrix_shape_rejected(self):
+        p = plan(32, SolverConfig(strategy="sequential"))
+        with pytest.raises(ValueError, match="N=32"):
+            p.execute(_rand(16))
+
+    def test_sequential_v_must_divide(self):
+        with pytest.raises(ValueError, match="panel width"):
+            resolve(64, SolverConfig(strategy="sequential", v=24))
+
+
+class TestLegacyShims:
+    def test_lu_factor_forwards_v_to_the_plan(self):
+        """Regression: lu_factor(A, v=8) must key/run the plan with v=8."""
+        import warnings
+
+        from repro.core.solve import lu_factor
+
+        clear_plan_cache()
+        N = 64
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            lu_factor(_rand(N), v=8, distributed=False)
+        p = plan(N, SolverConfig(strategy="sequential", v=8))
+        assert plan_cache_stats()["hits"] == 1  # shim built exactly this key
+        assert p.config.v == 8 and p.trace_count == 1
+
+    def test_auto_with_oversized_grid_raises(self):
+        import jax
+
+        n_dev = len(jax.devices())
+        big = GridConfig(Px=8, Py=8, c=4, v=8, N=2048)
+        if n_dev >= big.P_used:
+            pytest.skip("host has enough devices")
+        with pytest.raises(ValueError, match="devices"):
+            plan(2048, SolverConfig(strategy="auto", grid=big))
+
+
+class TestRegistry:
+    def test_register_and_duplicate_rejected(self):
+        calls = []
+
+        @register_strategy("_test_strategy")
+        def build(N, config, mesh=None):
+            calls.append(N)
+            return None
+
+        assert "_test_strategy" in available_strategies()
+        with pytest.raises(ValueError, match="already registered"):
+            register_strategy("_test_strategy")(lambda N, c, mesh=None: None)
+        register_strategy("_test_strategy", overwrite=True)(build)  # explicit ok
+
+
+class TestSolveEngine:
+    def test_engine_reuses_one_plan(self):
+        clear_plan_cache()
+        N = 32
+        eng = SolveEngine(N, SolverConfig(strategy="sequential"))
+        eng2 = SolveEngine(N, SolverConfig(strategy="sequential"))
+        assert eng.plan is eng2.plan  # same cached plan across engines
+        A, b = _rand(N), RNG.standard_normal(N).astype(np.float32)
+        x = np.asarray(eng.solve(A, b))
+        assert np.abs(A @ x - b).max() < 5e-4
+        x2 = np.asarray(eng.resolve(b * 2))
+        assert np.abs(A @ x2 - 2 * b).max() < 1e-3
+        st = eng.stats()
+        assert st["factorizations"] == 1 and st["solves"] == 2
+        assert st["trace_count"] == 1
+
+    def test_engine_solve_many(self):
+        N = 16
+        eng = SolveEngine(N, strategy="sequential")
+        systems = [(_rand(N), RNG.standard_normal(N).astype(np.float32)) for _ in range(3)]
+        xs = eng.solve_many(systems)
+        for (A, b), x in zip(systems, xs):
+            assert np.abs(A @ x - b).max() < 5e-4
+        assert eng.plan.trace_count == 1  # one compile for the whole batch
+
+    def test_engine_resolve_requires_factor(self):
+        eng = SolveEngine(16, strategy="sequential")
+        with pytest.raises(RuntimeError, match="no factorization"):
+            eng.resolve(np.zeros(16, np.float32))
