@@ -1,11 +1,21 @@
 """Benchmark harness entry: one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--skip-measured]
+    PYTHONPATH=src python -m benchmarks.run [--skip-measured] [--smoke]
+    PYTHONPATH=src python -m benchmarks.run --validate
 
 Prints ``name,us_per_call,derived``-style CSV blocks per section and writes
 a machine-readable ``BENCH_lu.json`` next to the repo root (per-strategy
-wall time, instrumented comm volume, model prediction, and plan-cache
-hit/miss + trace counts) so successive PRs accumulate a perf trajectory.
+*and per-kernel-backend* wall time, instrumented comm volume, model
+prediction, plan-cache hit/miss + trace counts) so successive PRs accumulate
+a perf trajectory.
+
+``--smoke`` runs the CI-sized subset (model tables + a small-N executed
+sweep over both kernel backends) and writes the full-schema JSON to
+``BENCH_lu.smoke.json`` — a separate path so a local smoke run never
+clobbers the tracked full-run trajectory file.  ``--validate`` checks the
+full-run JSON (``--validate --smoke`` the smoke one) against the schema and
+exits non-zero on violations — CI runs smoke + validate and uploads the
+artifact.
 """
 
 from __future__ import annotations
@@ -15,16 +25,74 @@ import os
 import sys
 import time
 
-BENCH_JSON = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "BENCH_lu.json"))
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+BENCH_JSON = os.path.join(_ROOT, "BENCH_lu.json")
+BENCH_SMOKE_JSON = os.path.join(_ROOT, "BENCH_lu.smoke.json")
+
+SCHEMA = "BENCH_lu.v2"
+_MEASURED_KEYS = {
+    "strategy", "backend", "N", "grid", "wall_us_per_call", "reconstruction_err",
+    "solve_err", "comm_per_proc_elements", "model_per_proc_elements",
+    "trace_count", "plan_cache_hits",
+}
+_DELTA_KEYS = {"strategy", "N", "ref_us", "pallas_us", "pallas_over_ref"}
+_CACHE_KEYS = {"hits", "misses", "evictions", "size", "capacity"}
 
 
 def _section(title):
     print(f"\n### {title}")
 
 
+def validate_bench(path: str = BENCH_JSON, mode: str = "full") -> list[str]:
+    """Schema check for a BENCH_lu json; returns a list of violations."""
+    errors: list[str] = []
+    if not os.path.exists(path):
+        return [f"{path} does not exist"]
+    with open(path) as f:
+        bench = json.load(f)
+    if bench.get("schema") != SCHEMA:
+        errors.append(f"schema is {bench.get('schema')!r}, expected {SCHEMA!r}")
+    if bench.get("mode") != mode:
+        errors.append(f"mode is {bench.get('mode')!r}, expected {mode!r} for {path}")
+    if "table2" not in bench:
+        errors.append("missing section: table2")
+    measured = bench.get("measured")
+    if not isinstance(measured, list) or not measured:
+        errors.append("measured must be a non-empty list of records")
+        measured = []
+    for i, rec in enumerate(measured):
+        missing = _MEASURED_KEYS - set(rec)
+        if missing:
+            errors.append(f"measured[{i}] missing keys: {sorted(missing)}")
+    backends = {r.get("backend") for r in measured}
+    if measured and not {"ref", "pallas"} <= backends:
+        errors.append(f"measured must cover both kernel backends, saw {sorted(map(str, backends))}")
+    for i, d in enumerate(bench.get("backend_delta", [])):
+        missing = _DELTA_KEYS - set(d)
+        if missing:
+            errors.append(f"backend_delta[{i}] missing keys: {sorted(missing)}")
+    if measured and not bench.get("backend_delta"):
+        errors.append("missing section: backend_delta (ref-vs-pallas wall-time rows)")
+    cache = bench.get("plan_cache")
+    if not isinstance(cache, dict) or not _CACHE_KEYS <= set(cache):
+        errors.append(f"plan_cache must carry {sorted(_CACHE_KEYS)}, got {cache}")
+    return errors
+
+
 def main() -> None:
+    smoke = "--smoke" in sys.argv
+    if "--validate" in sys.argv:
+        path = BENCH_SMOKE_JSON if smoke else BENCH_JSON
+        errors = validate_bench(path, mode="smoke" if smoke else "full")
+        for e in errors:
+            print(f"SCHEMA-ERROR: {e}")
+        if errors:
+            sys.exit(1)
+        print(f"# {path} conforms to {SCHEMA}")
+        return
+
     skip_measured = "--skip-measured" in sys.argv
-    bench: dict = {"schema": "BENCH_lu.v1"}
+    bench: dict = {"schema": SCHEMA, "mode": "smoke" if smoke else "full"}
 
     _section("Table 2: communication volume models vs paper (GB)")
     t0 = time.perf_counter()
@@ -33,32 +101,36 @@ def main() -> None:
     bench["table2"] = table2.main()
     print(f"# table2 done in {time.perf_counter()-t0:.1f}s")
 
-    _section("Fig 6a/6b/7: scaling + exascale extrapolation")
-    from benchmarks import scaling
+    if not smoke:
+        _section("Fig 6a/6b/7: scaling + exascale extrapolation")
+        from benchmarks import scaling
 
-    bench["scaling"] = scaling.main()
+        bench["scaling"] = scaling.main()
 
-    _section("Section 6: I/O lower bounds (solver vs closed form)")
-    from benchmarks import lower_bounds
+        _section("Section 6: I/O lower bounds (solver vs closed form)")
+        from benchmarks import lower_bounds
 
-    lower_bounds.main()
+        lower_bounds.main()
 
     if not skip_measured:
-        _section("Executed distributed LU via plan/execute (8 host devices)")
+        title = "smoke (N=64)" if smoke else "8 host devices"
+        _section(f"Executed distributed LU via plan/execute, ref + pallas backends ({title})")
         from benchmarks import lu_measured
 
-        measured = lu_measured.main()
+        measured = lu_measured.main(smoke=smoke)
         if measured:
             bench.update(measured)
 
-    _section("Roofline table (from dry-run results, single pod)")
-    from benchmarks import roofline_table
+    if not smoke:
+        _section("Roofline table (from dry-run results, single pod)")
+        from benchmarks import roofline_table
 
-    roofline_table.main()
+        roofline_table.main()
 
-    with open(BENCH_JSON, "w") as f:
+    out_path = BENCH_SMOKE_JSON if smoke else BENCH_JSON
+    with open(out_path, "w") as f:
         json.dump(bench, f, indent=1, default=str)
-    print(f"\n# wrote {BENCH_JSON}")
+    print(f"\n# wrote {out_path}")
 
 
 if __name__ == "__main__":

@@ -48,6 +48,14 @@ def main():
     assert p2 is p and p.trace_count == 1
     print(f"plan cache: {plan_cache_stats()} (traced once, reused)")
 
+    # 5. the same schedule on the Pallas kernel backend (MXU-tiled panel
+    #    LUP / TRSM / Schur kernels; interpret mode on CPU, Mosaic on TPU):
+    #    a different cache key, identical pivots, allclose factors.
+    fact_pl = plan(N, SolverConfig(strategy="sequential", backend="pallas")).execute(A)
+    err_pl = float(np.abs(np.asarray(fact_pl.reconstruct()) - A).max())
+    print(f"pallas backend: {fact_pl.comm_report().splitlines()[0]} "
+          f"(|PA-LU|_max = {err_pl:.2e})")
+
     # the paper's parallel I/O lower bound and COnfLUX's cost at cluster scale
     Nbig, P, c = 16384, 1024, 8
     M = c * Nbig**2 / P

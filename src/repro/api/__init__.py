@@ -11,8 +11,11 @@
 
 Strategies plug in through `@register_strategy("name")` — see
 `repro.api.strategies` for the built-ins (sequential / conflux /
-baseline2d / auto).  Plans are cached by (N, dtype, strategy, pivot,
-grid, v); `plan_cache_stats()` exposes hit/miss counters.
+baseline2d / auto).  Local compute routes through a `KernelBackend`
+(`SolverConfig.backend`: "ref" jnp paths or "pallas" MXU-tiled kernels).
+Plans are cached by (N, dtype, strategy, pivot, grid, v, backend) in an
+LRU-bounded cache; `plan_cache_stats()` exposes hit/miss/eviction counters
+and `set_plan_cache_capacity()` the bound.
 """
 
 from repro.api.config import SolverConfig
@@ -23,6 +26,7 @@ from repro.api.plan import (
     plan,
     plan_cache_stats,
     resolve,
+    set_plan_cache_capacity,
 )
 from repro.api.registry import available_strategies, get_strategy, register_strategy
 from repro.api.result import Factorization
@@ -38,6 +42,13 @@ def comm_volume(N: int, grid: GridConfig, pivot: str = "tournament") -> dict:
     return lu_comm_volume(N, grid, pivot=pivot)
 
 
+def available_backends() -> tuple[str, ...]:
+    """Registered KernelBackend names (lazy import keeps repro.api light)."""
+    from repro.kernels.backend import available_backends as _ab
+
+    return _ab()
+
+
 __all__ = [
     "SolverConfig",
     "GridConfig",
@@ -50,6 +61,8 @@ __all__ = [
     "resolve",
     "plan_cache_stats",
     "clear_plan_cache",
+    "set_plan_cache_capacity",
+    "available_backends",
     "register_strategy",
     "get_strategy",
     "available_strategies",

@@ -31,6 +31,12 @@ class SolverConfig:
               replication factor c <= P*M/N^2 during grid optimization).
     P_target: processor budget for grid selection; None = all local devices.
     v:        panel width override; None lets the strategy/optimizer choose.
+    backend:  registered KernelBackend name supplying the local compute
+              primitives — "ref" (pure jnp) or "pallas" (MXU-tiled kernels;
+              interpret mode on CPU).  Validated at plan resolution, which
+              auto-falls back pallas -> ref (with a warning) when the plan
+              violates the kernels' tiling constraints (float64, v not a
+              multiple of 8).
     """
 
     strategy: str = "auto"
@@ -40,11 +46,16 @@ class SolverConfig:
     M: float = 2.0**14
     P_target: int | None = None
     v: int | None = None
+    backend: str = "ref"
 
     def __post_init__(self):
         object.__setattr__(self, "dtype", np.dtype(self.dtype).name)
         if self.pivot not in PIVOTS:
             raise ValueError(f"unknown pivot {self.pivot!r}; choose from {PIVOTS}")
+        if not isinstance(self.backend, str) or not self.backend:
+            raise ValueError(
+                f"backend must be a registered KernelBackend name, got {self.backend!r}"
+            )
 
     def with_(self, **changes) -> "SolverConfig":
         """Functional update (dataclasses.replace with validation rerun)."""
@@ -53,7 +64,8 @@ class SolverConfig:
     def cache_key(self, N: int) -> tuple:
         """Key identifying the compiled plan this config resolves to.
 
-        Only meaningful on a *resolved* config (concrete strategy + grid);
-        `plan()` resolves before keying.
+        Only meaningful on a *resolved* config (concrete strategy + grid +
+        backend); `plan()` resolves before keying, so a pallas plan and a ref
+        plan of the same problem never share a cache entry.
         """
-        return (N, self.dtype, self.strategy, self.pivot, self.grid, self.v)
+        return (N, self.dtype, self.strategy, self.pivot, self.grid, self.v, self.backend)

@@ -1,18 +1,26 @@
 """plan/execute core: compiled FactorizationPlans and their registry cache.
 
-`plan(N, config)` resolves a `SolverConfig` to a concrete strategy + grid,
-then returns the cached `FactorizationPlan` for that key — building (and
-therefore tracing/jitting) one only on a cache miss.  The plan owns the
-mesh, the block-cyclic layout, and the jitted shard_map executable;
+`plan(N, config)` resolves a `SolverConfig` to a concrete strategy + grid +
+kernel backend, then returns the cached `FactorizationPlan` for that key —
+building (and therefore tracing/jitting) one only on a cache miss.  The plan
+owns the mesh, the block-cyclic layout, and the jitted shard_map executable;
 `plan.execute(A)` runs without re-tracing.  Executing the same
-(N, dtype, strategy, pivot, grid) twice compiles exactly once — assert it
-with `plan.trace_count` or `plan_cache_stats()`.
+(N, dtype, strategy, pivot, grid, v, backend) twice compiles exactly once —
+assert it with `plan.trace_count` or `plan_cache_stats()`.
+
+The cache is LRU-bounded (`set_plan_cache_capacity`, default
+REPRO_PLAN_CACHE_CAPACITY or 64): multi-tenant serving traffic with many
+shapes evicts the least-recently-planned executable instead of holding every
+compiled program forever.  Evictions only drop the cache's reference —
+plans already held (e.g. by a `SolveEngine`) keep working.
 """
 
 from __future__ import annotations
 
+import os
 import threading
 import warnings
+from collections import OrderedDict
 
 import numpy as np
 
@@ -65,29 +73,80 @@ class FactorizationPlan:
         self.execute_count += 1
         return Factorization(
             F=F, rows=rows, grid=self.grid, comm=dict(self.comm),
-            strategy=self.config.strategy,
+            strategy=self.config.strategy, backend=self.config.backend,
         )
 
     def __repr__(self):
         return (f"FactorizationPlan(N={self.N}, strategy={self.config.strategy!r}, "
-                f"pivot={self.config.pivot!r}, grid={self.grid}, "
+                f"pivot={self.config.pivot!r}, backend={self.config.backend!r}, "
+                f"grid={self.grid}, "
                 f"traces={self.trace_count}, executes={self.execute_count})")
 
 
-_PLAN_CACHE: dict[tuple, FactorizationPlan] = {}
+def _capacity_from_env(default: int = 64) -> int:
+    """Parse REPRO_PLAN_CACHE_CAPACITY without letting a bad value break
+    `import repro.api`: non-integer or negative falls back to the default
+    with a warning (0 = unbounded, matching set_plan_cache_capacity)."""
+    raw = os.environ.get("REPRO_PLAN_CACHE_CAPACITY")
+    if raw is None:
+        return default
+    try:
+        cap = int(raw)
+        if cap < 0:
+            raise ValueError
+        return cap
+    except ValueError:
+        warnings.warn(
+            f"ignoring REPRO_PLAN_CACHE_CAPACITY={raw!r} (want an integer >= 0, "
+            f"0 = unbounded); using {default}",
+            stacklevel=2,
+        )
+        return default
+
+
+_PLAN_CACHE: OrderedDict[tuple, FactorizationPlan] = OrderedDict()
 _BUILDING: dict[tuple, threading.Event] = {}
-_STATS = {"hits": 0, "misses": 0}
+_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+_CAPACITY = _capacity_from_env()
 _LOCK = threading.Lock()
 
 
+def _resolve_backend(N: int, config: SolverConfig) -> SolverConfig:
+    """Validate the kernel backend and apply the pallas -> ref auto-fallback.
+
+    Runs after strategy resolution, so the panel width is concrete (config.v
+    or grid.v) and the fallback decision lands in the cache key — a config
+    that *requested* pallas but cannot run it resolves to (and shares) the
+    ref plan.
+    """
+    from repro.kernels.backend import available_backends, pallas_constraint_violation
+
+    if config.backend not in available_backends():
+        raise ValueError(
+            f"unknown kernel backend {config.backend!r}; "
+            f"available: {available_backends()}"
+        )
+    if config.backend == "pallas":
+        v = config.grid.v if config.grid is not None else config.v
+        reason = pallas_constraint_violation(config.dtype, v)
+        if reason:
+            warnings.warn(
+                f"backend 'pallas' cannot run this plan (N={N}: {reason}); "
+                f"falling back to 'ref'",
+                stacklevel=4,
+            )
+            return config.with_(backend="ref")
+    return config
+
+
 def resolve(N: int, config: SolverConfig) -> SolverConfig:
-    """Resolve "auto"/missing-grid configs to a concrete strategy + grid."""
+    """Resolve "auto"/missing-grid/backend configs to concrete choices."""
     for _ in range(3):
         builder = get_strategy(config.strategy)
         resolver = getattr(builder, "resolve", None)
         resolved = resolver(N, config) if resolver else config
         if resolved.strategy == config.strategy:
-            return resolved
+            return _resolve_backend(N, resolved)
         config = resolved
     raise RuntimeError(f"strategy resolution did not converge for {config}")
 
@@ -113,6 +172,7 @@ def plan(N: int, config: SolverConfig | None = None, *, mesh=None,
             cached = _PLAN_CACHE.get(key)
             if cached is not None:
                 _STATS["hits"] += 1
+                _PLAN_CACHE.move_to_end(key)  # LRU touch
                 return cached
             pending = _BUILDING.get(key)
             if pending is None:
@@ -126,6 +186,7 @@ def plan(N: int, config: SolverConfig | None = None, *, mesh=None,
         built = builder(N, resolved)
         with _LOCK:
             _PLAN_CACHE[key] = built
+            _evict_lru_locked()
         return built
     finally:
         with _LOCK:
@@ -145,12 +206,36 @@ def factor(A, config: SolverConfig | None = None, **overrides) -> Factorization:
     return plan(A.shape[0], config, **overrides).execute(A)
 
 
+def _evict_lru_locked() -> None:
+    """Drop least-recently-used plans until within capacity (lock held)."""
+    if _CAPACITY <= 0:  # 0 = unbounded
+        return
+    while len(_PLAN_CACHE) > _CAPACITY:
+        _PLAN_CACHE.popitem(last=False)
+        _STATS["evictions"] += 1
+
+
+def set_plan_cache_capacity(capacity: int) -> int:
+    """Set the LRU bound (number of cached plans; 0 = unbounded).
+
+    Shrinks the cache immediately if it already exceeds the new bound.
+    Returns the previous capacity so callers can restore it.
+    """
+    global _CAPACITY
+    if capacity < 0:
+        raise ValueError(f"capacity must be >= 0 (0 = unbounded), got {capacity}")
+    with _LOCK:
+        prev, _CAPACITY = _CAPACITY, capacity
+        _evict_lru_locked()
+    return prev
+
+
 def plan_cache_stats() -> dict:
     with _LOCK:
-        return {**_STATS, "size": len(_PLAN_CACHE)}
+        return {**_STATS, "size": len(_PLAN_CACHE), "capacity": _CAPACITY}
 
 
 def clear_plan_cache() -> None:
     with _LOCK:
         _PLAN_CACHE.clear()
-        _STATS.update(hits=0, misses=0)
+        _STATS.update(hits=0, misses=0, evictions=0)

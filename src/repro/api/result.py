@@ -50,6 +50,7 @@ class Factorization:
     grid: GridConfig | None = None
     comm: dict = field(default_factory=dict)
     strategy: str = ""
+    backend: str = ""  # KernelBackend that ran the local compute ("ref"/"pallas")
 
     @property
     def N(self) -> int:
@@ -92,7 +93,8 @@ class Factorization:
 
     def comm_report(self) -> str:
         """Human-readable instrumented communication volume (elements/proc)."""
-        head = f"strategy={self.strategy or '?'} grid={self.grid} N={self.N}"
+        head = (f"strategy={self.strategy or '?'} backend={self.backend or '?'} "
+                f"grid={self.grid} N={self.N}")
         if not self.comm:
             return f"{head}\n  single-device: no inter-processor communication"
         lines = [head]

@@ -47,11 +47,12 @@ def build_sequential(N: int, config: SolverConfig, mesh=None) -> FactorizationPl
     from repro.core.lu.sequential import lu_masked_sequential
 
     v = config.v
+    backend = config.backend
     p = FactorizationPlan(N, config)
 
     def _traced(A):
         p._note_trace()
-        return lu_masked_sequential(A, v=v)
+        return lu_masked_sequential(A, v=v, backend=backend)
 
     fn = jax.jit(_traced)
 
@@ -115,7 +116,7 @@ def _build_shardmap_plan(N: int, config: SolverConfig, mesh=None) -> Factorizati
 
     def _traced(blocks):
         p._note_trace()
-        return _local_lu(grid, config.pivot, blocks)
+        return _local_lu(grid, config.pivot, config.backend, blocks)
 
     fn = jax.jit(
         _shard_map(

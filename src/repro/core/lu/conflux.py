@@ -43,7 +43,7 @@ import numpy as np
 from repro.api.result import Factorization
 from repro.core.lu.cost_models import conflux_model
 from repro.core.lu.grid import GridConfig
-from repro.core.lu.sequential import masked_lup
+from repro.kernels.backend import get_backend
 
 # Deprecated alias: `Factorization` (repro.api.result) subsumes the old
 # LUResult dataclass — same F / rows / grid / comm fields, plus solve(),
@@ -56,7 +56,30 @@ LUResult = Factorization
 # ---------------------------------------------------------------------------
 
 def block_cyclic_scatter(A: np.ndarray, Px: int, Py: int, v: int) -> np.ndarray:
-    """A [N, N] -> blocks [Px, Py, R, C] with v x v tile-cyclic ownership."""
+    """A [N, N] -> blocks [Px, Py, R, C] with v x v tile-cyclic ownership.
+
+    Global tile (bi, bj) = (li*Px + px, lj*Py + py), so splitting each tile
+    axis into (local, owner) and hoisting the owner axes is the whole layout:
+    one reshape/transpose instead of the O((N/v)^2) Python double loop.
+    """
+    N = A.shape[0]
+    nbi = N // v
+    T = A.reshape(nbi // Px, Px, v, nbi // Py, Py, v)  # [li, px, r, lj, py, c]
+    return np.ascontiguousarray(
+        T.transpose(1, 4, 0, 2, 3, 5).reshape(Px, Py, (nbi // Px) * v, (nbi // Py) * v)
+    )
+
+
+def block_cyclic_gather(blocks: np.ndarray, N: int, v: int) -> np.ndarray:
+    """Inverse of block_cyclic_scatter."""
+    Px, Py = blocks.shape[:2]
+    nbi = N // v
+    T = blocks.reshape(Px, Py, nbi // Px, v, nbi // Py, v)  # [px, py, li, r, lj, c]
+    return np.ascontiguousarray(T.transpose(2, 0, 3, 4, 1, 5).reshape(N, N))
+
+
+def _block_cyclic_scatter_loop(A: np.ndarray, Px: int, Py: int, v: int) -> np.ndarray:
+    """Loop-form scatter kept as the oracle for the vectorized layout."""
     N = A.shape[0]
     nbi = N // v
     R, C = (nbi // Px) * v, (nbi // Py) * v
@@ -69,8 +92,8 @@ def block_cyclic_scatter(A: np.ndarray, Px: int, Py: int, v: int) -> np.ndarray:
     return out
 
 
-def block_cyclic_gather(blocks: np.ndarray, N: int, v: int) -> np.ndarray:
-    """Inverse of block_cyclic_scatter."""
+def _block_cyclic_gather_loop(blocks: np.ndarray, N: int, v: int) -> np.ndarray:
+    """Loop-form gather kept as the oracle for the vectorized layout."""
     Px, Py = blocks.shape[:2]
     A = np.zeros((N, N), blocks.dtype)
     nbi = N // v
@@ -87,11 +110,14 @@ def block_cyclic_gather(blocks: np.ndarray, N: int, v: int) -> np.ndarray:
 # The distributed factorization (shard_map body).
 # ---------------------------------------------------------------------------
 
-def _local_lu(cfg: GridConfig, pivot: str, Aloc):
+def _local_lu(cfg: GridConfig, pivot: str, backend: str, Aloc):
     """Local program for device (px, py, pz).  Aloc: [1, 1, R, C] local block.
 
     pivot: "tournament" (COnfLUX, butterfly merge along px) or "partial"
-    (ScaLAPACK-style column-by-column global argmax — the 2D baseline)."""
+    (ScaLAPACK-style column-by-column global argmax — the 2D baseline).
+    backend: registered KernelBackend name ("ref" / "pallas") supplying the
+    local compute primitives (panel LUP, TRSMs, Schur update)."""
+    bk = get_backend(backend)
     Px, Py, c, v, N = cfg.Px, cfg.Py, cfg.c, cfg.v, cfg.N
     px = jax.lax.axis_index("px")
     py = jax.lax.axis_index("py")
@@ -115,7 +141,7 @@ def _local_lu(cfg: GridConfig, pivot: str, Aloc):
     def tournament(panel_vals, weights):
         """Local masked LUP -> butterfly merge along px.  Returns packed A00
         factors [v, v] (in elimination order) and winners' global ids [v]."""
-        _, order, ok = masked_lup(panel_vals, weights, v)
+        _, order, ok = bk.panel_lup(panel_vals, weights, v)
         cand_vals = panel_vals[order, :]  # original values of local winners
         valid = ok & (weights[order] > 0)
         cand_gids = jnp.where(valid, row_gid[order], -1)
@@ -126,10 +152,10 @@ def _local_lu(cfg: GridConfig, pivot: str, Aloc):
             vals2 = jnp.concatenate([cand_vals, other_vals], axis=0)  # [2v, v]
             gids2 = jnp.concatenate([cand_gids, other_gids], axis=0)
             w2 = (gids2 >= 0).astype(dtype)
-            _, order2, ok2 = masked_lup(vals2, w2, v)
+            _, order2, ok2 = bk.panel_lup(vals2, w2, v)
             cand_vals = vals2[order2, :]
             cand_gids = jnp.where(ok2, gids2[order2], -1)
-        A00p, order_f, ok_f = masked_lup(cand_vals, (cand_gids >= 0).astype(dtype), v)
+        A00p, order_f, ok_f = bk.panel_lup(cand_vals, (cand_gids >= 0).astype(dtype), v)
         return A00p[order_f, :], jnp.where(ok_f, cand_gids[order_f], -1)
 
     def partial_pivot(panel_vals, weights):
@@ -189,20 +215,19 @@ def _local_lu(cfg: GridConfig, pivot: str, Aloc):
         new_active = active * (1.0 - is_new_piv)
 
         # -- 4. L10 on the owner column, broadcast along py. ------------------
-        L10_own = jax.scipy.linalg.solve_triangular(
-            U00.T, (panel * new_active[:, None]).T, lower=True
-        ).T
+        L10_own = bk.trsm_right_upper(panel * new_active[:, None], U00)
         L10 = jax.lax.psum(L10_own * ow, "py")  # [R, v]
 
         # -- 5. Pivot rows gathered over (px, pz); local TRSM -> U01. ---------
         R01 = jax.lax.psum(S.T @ Aloc, ("px", "pz"))  # [v, C] current values
         trailing = (col_gid >= (t + 1) * v).astype(dtype)  # [C]
-        U01 = jax.scipy.linalg.solve_triangular(L00, R01, lower=True, unit_diagonal=True)
+        U01 = bk.trsm_left_lower(L00, R01, unit=True)
         U01 = U01 * trailing[None, :]
 
-        # -- 6. Schur update on layer t % c (2.5D update partitioning). -------
+        # -- 6. Schur update on layer t % c (2.5D update partitioning), -------
+        #    blocked to MXU-aligned tiles by the backend.
         on_layer = (pz == (t % c)).astype(dtype)
-        Aloc = Aloc - on_layer * (L10 * new_active[:, None]) @ U01
+        Aloc = bk.schur_update(Aloc, L10 * (on_layer * new_active)[:, None], U01)
 
         # -- 7. Write factors (identical on every pz layer). ------------------
         # Panel column block: still-active rows get multipliers, new pivot
@@ -238,7 +263,8 @@ def make_lu_mesh(cfg: GridConfig, devices=None) -> jax.sharding.Mesh:
 
 
 def conflux_lu(A, grid: GridConfig | None = None, P_target: int | None = None,
-               M: float = 2**14, mesh=None, pivot: str = "tournament") -> Factorization:
+               M: float = 2**14, mesh=None, pivot: str = "tournament",
+               backend: str = "ref") -> Factorization:
     """Factorize A (N x N) with the COnfLUX schedule on available devices.
 
     Deprecated shim over `repro.api.plan`: the shard_map program is built
@@ -252,7 +278,7 @@ def conflux_lu(A, grid: GridConfig | None = None, P_target: int | None = None,
     A = np.asarray(A)
     cfg = SolverConfig(
         strategy="conflux", pivot=pivot, grid=grid, dtype=A.dtype.name,
-        M=float(M), P_target=P_target,
+        M=float(M), P_target=P_target, backend=backend,
     )
     return plan(A.shape[0], cfg, mesh=mesh).execute(A)
 

@@ -5,6 +5,10 @@ pivot order is tracked as an index vector.  The packed factor matrix F keeps
 every row in its original position; row r that was chosen as the k-th pivot
 holds U[k, k:] in its trailing columns and L multipliers in columns < k.
 `unpack_factors` reorders into the classic PA = LU triple.
+
+`masked_lup` is the "ref" KernelBackend's panel primitive (see
+`repro.kernels.backend`); `lu_masked_sequential` routes its panel LUP /
+TRSM / Schur compute through whichever backend the plan selected.
 """
 
 from __future__ import annotations
@@ -53,15 +57,21 @@ def masked_lup(panel: jax.Array, weights: jax.Array, v: int):
     return F, order, ok
 
 
-@functools.partial(jax.jit, static_argnames=("v",))
-def lu_masked_sequential(A: jax.Array, v: int = 32):
-    """Full masked LU of A [N, N] in panels of width v (pure jnp oracle).
+@functools.partial(jax.jit, static_argnames=("v", "backend"))
+def lu_masked_sequential(A: jax.Array, v: int = 32, backend: str = "ref"):
+    """Full masked LU of A [N, N] in panels of width v — the single-device
+    oracle, with the local compute (panel LUP, TRSM, Schur update) routed
+    through the named `KernelBackend` ("ref" = pure jnp, "pallas" = the
+    MXU-tiled kernels).
 
     Returns (F, rows): packed factors in original row positions and the pivot
     order `rows` (global row index of the k-th pivot).  Equivalent to partial
     pivoting — at each panel the locally-best rows are chosen, like a
     single-processor tournament.
     """
+    from repro.kernels.backend import get_backend
+
+    bk = get_backend(backend)
     N = A.shape[0]
     assert N % v == 0, "N must be a multiple of the panel width v"
     nsteps = N // v
@@ -70,7 +80,7 @@ def lu_masked_sequential(A: jax.Array, v: int = 32):
         F, active, rows = carry
         c0 = t * v
         panel = jax.lax.dynamic_slice(F, (0, c0), (N, v))
-        Fp, order, _ = masked_lup(panel, active, v)
+        Fp, order, _ = bk.panel_lup(panel, active, v)
         F = jax.lax.dynamic_update_slice(F, Fp, (0, c0))
         rows = jax.lax.dynamic_update_slice(rows, order.astype(jnp.int32), (c0,))
         piv_onehot = jax.nn.one_hot(order, N, dtype=F.dtype)  # [v, N]
@@ -81,8 +91,8 @@ def lu_masked_sequential(A: jax.Array, v: int = 32):
         U00_packed = piv_onehot @ Fp  # [v, v] packed LU of the pivot block
         L00 = jnp.tril(U00_packed, -1) + jnp.eye(v, dtype=F.dtype)
         R01 = (piv_onehot @ F) * colmask[None, :]  # pivot rows, trailing cols
-        U01 = jax.scipy.linalg.solve_triangular(L00, R01, lower=True, unit_diagonal=True)
-        F = F - (L10 @ U01) * active[:, None] * colmask[None, :]
+        U01 = bk.trsm_left_lower(L00, R01, unit=True)
+        F = bk.schur_update(F, L10 * active[:, None], U01 * colmask[None, :])
         # Write U01 into the pivot rows' trailing columns.
         F = F * (1.0 - piv_onehot.sum(0)[:, None] * colmask[None, :]) + piv_onehot.T @ (
             U01 * colmask[None, :]

@@ -3,5 +3,7 @@
 Each kernel module exposes a pallas_call implementation with explicit
 BlockSpec VMEM tiling; ops.py holds the jit'd public wrappers (interpret
 mode on CPU, compiled on TPU); ref.py holds the pure-jnp oracles used by
-the allclose sweeps in tests/test_kernels.py.
+the allclose sweeps in tests/test_kernels.py; backend.py is the dispatch
+layer (the `KernelBackend` protocol + "ref"/"pallas" registrations) the
+factorization strategies route their local compute through.
 """

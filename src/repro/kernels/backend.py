@@ -1,0 +1,163 @@
+"""KernelBackend — pluggable local-compute primitives for the factorizations.
+
+The COnfLUX schedule (and its 2D/sequential siblings) spends essentially all
+FLOPs in three local primitives (paper Algorithm 1): the masked panel LUP of
+the tournament (step 2), the triangular solves producing L10/U01 (steps 4/5),
+and the rank-v Schur update (step 6).  A `KernelBackend` packages one
+implementation of those primitives; the strategies call the backend instead
+of inlining jnp math, so swapping "ref" (pure jnp, any dtype) for "pallas"
+(the MXU-tiled kernels — interpret mode on CPU, Mosaic on TPU), or adding a
+future fused backend, touches no schedule code.  The follow-up paper
+(arXiv:2108.09337) builds Cholesky/QR from the same local kernels, so new
+factorizations become backend consumers for free.
+
+Selection flows from `SolverConfig.backend` through plan resolution
+(`repro.api.plan.resolve`), which validates the name and auto-falls back
+`pallas -> ref` (with a warning) when the plan violates the kernels' tiling
+constraints — see `pallas_constraint_violation` for the exact rules.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lu.sequential import masked_lup
+
+
+@runtime_checkable
+class KernelBackend(Protocol):
+    """The paper's local compute primitives, one jax-traceable method each.
+
+    Every method is called from inside traced code (a `fori_loop` step body
+    under `shard_map`/`jit`), so implementations must be pure functions of
+    their array arguments.
+    """
+
+    name: str
+
+    def panel_lup(self, panel: jax.Array, weights: jax.Array, v: int):
+        """Masked LUP of an [R, v] panel; rows with weight 0 are untouched.
+
+        Returns (F [R, v] packed factors, order [v] int32 pivot rows,
+        ok [v] bool validity)."""
+        ...
+
+    def trsm_right_upper(self, B: jax.Array, U: jax.Array) -> jax.Array:
+        """X U = B  ->  X = B U^-1.  B [R, v], U [v, v] upper (L10, step 4)."""
+        ...
+
+    def trsm_left_lower(self, L: jax.Array, B: jax.Array, *, unit: bool = True) -> jax.Array:
+        """L X = B  ->  X = L^-1 B.  L [v, v] (unit-)lower, B [v, C] (U01, step 5)."""
+        ...
+
+    def schur_update(self, A: jax.Array, L: jax.Array, U: jax.Array) -> jax.Array:
+        """A - L @ U.  A [M, N], L [M, K], U [K, N] (rank-v update, step 6)."""
+        ...
+
+
+_BACKENDS: dict[str, KernelBackend] = {}
+
+
+def register_backend(name: str, backend: KernelBackend, *, overwrite: bool = False) -> None:
+    if name in _BACKENDS and not overwrite:
+        raise ValueError(f"backend {name!r} already registered (pass overwrite=True)")
+    _BACKENDS[name] = backend
+
+
+def get_backend(name: str) -> KernelBackend:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel backend {name!r}; available: {available_backends()}"
+        ) from None
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+def pallas_constraint_violation(dtype, v: int | None) -> str | None:
+    """Why the resolved plan cannot run on the Pallas kernels (None = it can).
+
+    The rules mirror the hardware the kernels are tiled for: the MXU/VPU have
+    no float64 path (the kernels accumulate in fp32), and the VPU operates on
+    (8, 128) fp32 tiles, so sub-8 or non-8-aligned panel widths would force
+    ragged lane masking the kernels do not implement.
+    """
+    if np.dtype(dtype).itemsize > 4:
+        return (
+            f"dtype {np.dtype(dtype).name} exceeds the fp32 accumulation the "
+            f"MXU-tiled kernels provide"
+        )
+    if v is not None and (v < 8 or v % 8):
+        return f"panel width v={v} is not a multiple of the 8-sublane VPU tile"
+    return None
+
+
+def _tile(n: int, cap: int) -> int:
+    """Largest block size <= cap that divides n (grid tiling needs exact cover)."""
+    for d in range(min(cap, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+class RefBackend:
+    """Pure-jnp primitives — the numerics the strategies inlined before the
+    dispatch layer existed, bit-for-bit: native-dtype solves and matmuls."""
+
+    name = "ref"
+
+    def panel_lup(self, panel, weights, v):
+        return masked_lup(panel, weights, v)
+
+    def trsm_right_upper(self, B, U):
+        return jax.scipy.linalg.solve_triangular(U.T, B.T, lower=True).T
+
+    def trsm_left_lower(self, L, B, *, unit=True):
+        return jax.scipy.linalg.solve_triangular(L, B, lower=True, unit_diagonal=unit)
+
+    def schur_update(self, A, L, U):
+        return A - L @ U
+
+
+class PallasBackend:
+    """The MXU-tiled Pallas kernels (`repro.kernels.ops`), with block sizes
+    auto-fit to the local shapes: the largest divisor of each dimension not
+    exceeding the 128x128 MXU tile (256 for the long TRSM dimension)."""
+
+    name = "pallas"
+
+    def panel_lup(self, panel, weights, v):
+        from repro.kernels import ops
+
+        F, order, ok = ops.lu_panel(panel, weights.astype(panel.dtype))
+        return F, order, ok != 0
+
+    def trsm_right_upper(self, B, U):
+        from repro.kernels import ops
+
+        return ops.trsm_right_upper(B, U, br=_tile(B.shape[0], 256))
+
+    def trsm_left_lower(self, L, B, *, unit=True):
+        from repro.kernels import ops
+
+        return ops.trsm_left_lower(L, B, bc=_tile(B.shape[1], 256), unit=unit)
+
+    def schur_update(self, A, L, U):
+        from repro.kernels import ops
+
+        M, N = A.shape
+        K = L.shape[1]
+        return ops.schur_update(
+            A, L, U, bm=_tile(M, 128), bn=_tile(N, 128), bk=_tile(K, 128)
+        )
+
+
+register_backend("ref", RefBackend())
+register_backend("pallas", PallasBackend())

@@ -71,11 +71,13 @@ class SolveEngine:
         return {
             "N": self.N,
             "strategy": self.plan.config.strategy,
+            "backend": self.plan.config.backend,
             "grid": str(self.plan.grid),
             "factorizations": self._n_factor,
             "solves": self._n_solve,
             "trace_count": self.plan.trace_count,
             "factor_s_total": round(self._t_factor, 6),
             "solve_s_total": round(self._t_solve, 6),
+            # includes the LRU hit/miss/eviction + size/capacity counters
             "plan_cache": plan_cache_stats(),
         }

@@ -1,0 +1,144 @@
+"""KernelBackend dispatch: ref-vs-pallas parity through the plan/execute API.
+
+The kernel-level oracles live in test_kernels.py; these sweeps assert the
+*dispatch layer* — `SolverConfig.backend` flowing through plan resolution,
+the cache key, and the strategy hot loops — produces allclose factors and
+identical pivot orders end to end, across dtypes, panel widths, and
+strategies, plus the pallas -> ref auto-fallback and its warning.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    GridConfig,
+    SolverConfig,
+    available_backends,
+    clear_plan_cache,
+    plan,
+    plan_cache_stats,
+    resolve,
+)
+
+HERE = os.path.dirname(__file__)
+RNG = np.random.default_rng(7)
+
+
+def _rand(n, dtype="float32"):
+    return RNG.standard_normal((n, n)).astype(dtype)
+
+
+def _config(strategy, backend, dtype, v, N):
+    if strategy == "conflux":
+        return SolverConfig(strategy="conflux", backend=backend, dtype=dtype,
+                            grid=GridConfig(Px=1, Py=1, c=1, v=v, N=N))
+    return SolverConfig(strategy=strategy, backend=backend, dtype=dtype, v=v)
+
+
+class TestBackendRegistry:
+    def test_builtin_backends_registered(self):
+        assert {"ref", "pallas"} <= set(available_backends())
+
+    def test_unknown_backend_rejected_at_resolve(self):
+        with pytest.raises(ValueError, match="pallas"):
+            plan(32, SolverConfig(strategy="sequential", backend="cuda"))
+
+    def test_empty_backend_rejected_at_config(self):
+        with pytest.raises(ValueError, match="backend"):
+            SolverConfig(backend="")
+
+
+class TestEndToEndParity:
+    """Acceptance: both backends execute end-to-end via plan(N, cfg) with
+    allclose factors and identical pivot rows."""
+
+    @pytest.mark.parametrize("strategy", ["sequential", "conflux"])
+    @pytest.mark.parametrize("dtype", ["float32", "float64"])
+    @pytest.mark.parametrize("v", [8, 32])
+    def test_factors_and_pivots_match(self, strategy, dtype, v):
+        """f32 cells compare two genuinely different executables; f64 cells
+        assert the documented contract instead — the pallas request falls
+        back and *shares* the ref plan (distinct plans would be a bug)."""
+        N = 64
+        A = _rand(N, dtype)
+        plans, facts = {}, {}
+        for backend in ("ref", "pallas"):
+            cfg = _config(strategy, backend, dtype, v, N)
+            plans[backend] = plan(N, cfg)
+            facts[backend] = plans[backend].execute(A)
+        if dtype == "float64":
+            assert plans["pallas"] is plans["ref"]  # fallback shares the plan
+            assert plans["pallas"].config.backend == "ref"
+        else:
+            assert plans["pallas"] is not plans["ref"]
+            assert plans["pallas"].config.backend == "pallas"
+        ref, pal = facts["ref"], facts["pallas"]
+        np.testing.assert_array_equal(ref.rows, pal.rows)
+        np.testing.assert_allclose(ref.F, pal.F, rtol=1e-4, atol=1e-4)
+        # both are valid factorizations, not merely equal to each other
+        # (f32 tolerance either way: jax demotes f64 unless jax_enable_x64)
+        err = np.abs(np.asarray(pal.reconstruct()) - A).max()
+        assert err < 1e-4
+
+    def test_nonsquare_local_tiles_2dev_subprocess(self):
+        """Px=2, Py=1 grid: rectangular [N/2, N] local blocks per device."""
+        proc = subprocess.run(
+            [sys.executable, os.path.join(HERE, "multidev", "run_backend_parity.py")],
+            capture_output=True,
+            text=True,
+            timeout=600,
+            env={**os.environ, "PYTHONPATH": os.path.join(HERE, "..", "src")},
+        )
+        assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}"
+        assert "ALL-OK" in proc.stdout
+
+
+class TestBackendCacheKey:
+    def test_backends_never_share_a_plan(self):
+        """Acceptance: plan-cache keys differ by backend — no cross-backend hits."""
+        clear_plan_cache()
+        N = 32
+        p_ref = plan(N, SolverConfig(strategy="sequential", backend="ref", v=8))
+        p_pal = plan(N, SolverConfig(strategy="sequential", backend="pallas", v=8))
+        assert p_ref is not p_pal
+        stats = plan_cache_stats()
+        assert stats["misses"] == 2 and stats["hits"] == 0
+        assert plan(N, SolverConfig(strategy="sequential", backend="pallas", v=8)) is p_pal
+        assert plan_cache_stats()["hits"] == 1
+
+    def test_factorization_records_backend(self):
+        N = 32
+        fact = plan(N, SolverConfig(strategy="sequential", backend="pallas", v=8)).execute(
+            _rand(N)
+        )
+        assert fact.backend == "pallas"
+        assert "backend=pallas" in fact.comm_report()
+
+
+class TestPallasFallback:
+    def test_float64_falls_back_to_ref_with_warning(self):
+        """The MXU kernels accumulate in fp32: f64 plans resolve to ref and
+        share the ref plan (same cache key after fallback)."""
+        clear_plan_cache()
+        N = 32
+        with pytest.warns(UserWarning, match="falling back to 'ref'"):
+            p_pal = plan(N, SolverConfig(strategy="sequential", backend="pallas",
+                                         dtype="float64", v=8))
+        assert p_pal.config.backend == "ref"
+        p_ref = plan(N, SolverConfig(strategy="sequential", backend="ref",
+                                     dtype="float64", v=8))
+        assert p_pal is p_ref  # fallback landed in the cache key
+
+    def test_unaligned_panel_width_falls_back(self):
+        """v not a multiple of the 8-sublane VPU tile cannot run on pallas."""
+        with pytest.warns(UserWarning, match="multiple of the 8"):
+            cfg = resolve(60, SolverConfig(strategy="sequential", backend="pallas", v=12))
+        assert cfg.backend == "ref"
+
+    def test_aligned_f32_does_not_fall_back(self):
+        cfg = resolve(64, SolverConfig(strategy="sequential", backend="pallas", v=8))
+        assert cfg.backend == "pallas"

@@ -6,9 +6,16 @@ import os
 import subprocess
 import sys
 
+import numpy as np
 import pytest
 
-from repro.core.lu.conflux import lu_comm_volume
+from repro.core.lu.conflux import (
+    _block_cyclic_gather_loop,
+    _block_cyclic_scatter_loop,
+    block_cyclic_gather,
+    block_cyclic_scatter,
+    lu_comm_volume,
+)
 from repro.core.lu.cost_models import (
     candmc_model,
     conflux_model,
@@ -33,6 +40,30 @@ def test_distributed_lu_8dev_subprocess():
     )
     assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}"
     assert "ALL-OK" in proc.stdout
+
+
+class TestBlockCyclicLayout:
+    """Vectorized reshape/transpose scatter/gather vs the loop oracles."""
+
+    @pytest.mark.parametrize("Px,Py,v", [(1, 1, 8), (2, 2, 8), (4, 2, 4), (2, 1, 16)])
+    @pytest.mark.parametrize("dtype", [np.float32, np.float64])
+    def test_scatter_matches_loop_oracle(self, Px, Py, v, dtype):
+        N = 64
+        A = np.random.default_rng(1).standard_normal((N, N)).astype(dtype)
+        got = block_cyclic_scatter(A, Px, Py, v)
+        want = _block_cyclic_scatter_loop(A, Px, Py, v)
+        assert got.dtype == want.dtype and got.shape == want.shape
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("Px,Py,v", [(2, 2, 8), (4, 2, 4), (1, 2, 16)])
+    def test_gather_matches_loop_oracle_and_roundtrips(self, Px, Py, v):
+        N = 64
+        A = np.random.default_rng(2).standard_normal((N, N)).astype(np.float32)
+        blocks = block_cyclic_scatter(A, Px, Py, v)
+        np.testing.assert_array_equal(
+            block_cyclic_gather(blocks, N, v), _block_cyclic_gather_loop(blocks, N, v)
+        )
+        np.testing.assert_array_equal(block_cyclic_gather(blocks, N, v), A)
 
 
 class TestCommVolume:

@@ -14,6 +14,7 @@ from repro.api import (
     plan_cache_stats,
     register_strategy,
     resolve,
+    set_plan_cache_capacity,
 )
 from repro.serving.solve_engine import SolveEngine
 
@@ -83,6 +84,70 @@ class TestPlanCache:
     def test_plan_kwarg_overrides(self):
         p = plan(32, strategy="sequential", v=16)
         assert p.config.v == 16
+
+
+class TestPlanCacheLRU:
+    """Bounded plan cache: LRU eviction + counters (multi-tenant serving)."""
+
+    @pytest.fixture(autouse=True)
+    def _restore_capacity(self):
+        prev = plan_cache_stats()["capacity"]
+        yield
+        set_plan_cache_capacity(prev)
+
+    def test_eviction_at_capacity(self):
+        clear_plan_cache()
+        set_plan_cache_capacity(2)
+        for v in (4, 8, 16):  # third insert evicts the LRU entry (v=4)
+            plan(32, SolverConfig(strategy="sequential", v=v))
+        stats = plan_cache_stats()
+        assert stats["size"] == 2 and stats["evictions"] == 1 and stats["capacity"] == 2
+        plan(32, SolverConfig(strategy="sequential", v=4))  # must rebuild
+        assert plan_cache_stats()["misses"] == 4
+
+    def test_hit_refreshes_recency(self):
+        clear_plan_cache()
+        set_plan_cache_capacity(2)
+        p4 = plan(32, SolverConfig(strategy="sequential", v=4))
+        plan(32, SolverConfig(strategy="sequential", v=8))
+        assert plan(32, SolverConfig(strategy="sequential", v=4)) is p4  # touch v=4
+        plan(32, SolverConfig(strategy="sequential", v=16))  # evicts v=8, not v=4
+        assert plan(32, SolverConfig(strategy="sequential", v=4)) is p4
+        assert plan_cache_stats()["evictions"] == 1
+
+    def test_shrinking_capacity_evicts_immediately(self):
+        clear_plan_cache()
+        set_plan_cache_capacity(8)
+        for v in (4, 8, 16):
+            plan(32, SolverConfig(strategy="sequential", v=v))
+        set_plan_cache_capacity(1)
+        stats = plan_cache_stats()
+        assert stats["size"] == 1 and stats["evictions"] == 2
+
+    def test_evicted_plan_keeps_working(self):
+        clear_plan_cache()
+        set_plan_cache_capacity(1)
+        held = plan(32, SolverConfig(strategy="sequential", v=8))
+        plan(32, SolverConfig(strategy="sequential", v=16))  # evicts `held`
+        A = _rand(32)
+        fact = held.execute(A)  # outstanding reference still executes
+        assert np.abs(np.asarray(fact.reconstruct()) - A).max() < 5e-5
+
+    def test_capacity_must_be_nonnegative(self):
+        with pytest.raises(ValueError, match="capacity"):
+            set_plan_cache_capacity(-1)
+
+    def test_engine_stats_surface_evictions(self):
+        from repro.serving.solve_engine import SolveEngine
+
+        clear_plan_cache()
+        set_plan_cache_capacity(1)
+        eng = SolveEngine(32, SolverConfig(strategy="sequential", v=8))
+        plan(32, SolverConfig(strategy="sequential", v=16))  # evict engine's key
+        st = eng.stats()
+        assert st["plan_cache"]["evictions"] == 1
+        assert st["plan_cache"]["capacity"] == 1
+        assert st["backend"] == "ref"
 
 
 class TestFactorizationCorrectness:
