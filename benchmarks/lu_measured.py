@@ -5,10 +5,13 @@ pinned before jax initializes).
 
 Each (strategy, backend) pair executes the same plan twice: the second run
 demonstrates the re-trace win (trace_count stays 1, the plan cache reports a
-hit).  The conflux and sequential strategies run on both kernel backends —
-"ref" (pure jnp) and "pallas" (the MXU-tiled kernels, interpret mode on this
-CPU container) — so BENCH_lu.json carries the ref-vs-pallas wall-time delta
-per PR; on real TPUs the same dispatch compiles to Mosaic.
+hit).  The conflux/sequential LU strategies and the cholesky25d/
+sequential_chol SPD strategies run on both kernel backends — "ref" (pure
+jnp) and "pallas" (the MXU-tiled kernels, interpret mode on this CPU
+container) — so BENCH_lu.json carries the ref-vs-pallas wall-time delta and
+the conflux-vs-cholesky comm-volume ratio (~2x fewer elements/proc for the
+symmetric schedule) per PR; on real TPUs the same dispatch compiles to
+Mosaic.
 """
 
 from __future__ import annotations
@@ -25,7 +28,7 @@ import sys, time, json
 sys.path.insert(0, %(src)r)
 import numpy as np, jax.numpy as jnp
 from repro.api import SolverConfig, plan, plan_cache_stats, GridConfig
-from repro.core.lu.cost_models import conflux_model, scalapack2d_model
+from repro.core.lu.cost_models import chol_model, conflux_model, scalapack2d_model
 
 SMOKE = %(smoke)r
 rng = np.random.default_rng(0)
@@ -33,38 +36,48 @@ records = []
 print("impl,backend,N,grid,us_per_call,err,comm_per_proc,traces,cache_hits")
 for N in ((64,) if SMOKE else (128, 256)):
     A = rng.standard_normal((N, N)).astype(np.float32)
+    G = rng.standard_normal((N, N)).astype(np.float32)
+    A_spd = G @ G.T / N + np.eye(N, dtype=np.float32)  # the SPD/serving input
     b = rng.standard_normal((N, 4)).astype(np.float32)
     v = 16
+    grid25 = GridConfig(Px=2, Py=2, c=2, v=v, N=N)
     configs = []
     for backend in ("ref", "pallas"):
         configs.append(("conflux", SolverConfig(
-            strategy="conflux", backend=backend,
-            grid=GridConfig(Px=2, Py=2, c=2, v=v, N=N))))
+            strategy="conflux", backend=backend, grid=grid25)))
         configs.append(("sequential", SolverConfig(strategy="sequential",
                                                    backend=backend)))
+        configs.append(("cholesky25d", SolverConfig(
+            strategy="cholesky25d", backend=backend, grid=grid25)))
+        configs.append(("sequential_chol", SolverConfig(strategy="sequential_chol",
+                                                        backend=backend)))
     configs.append(("baseline2d", SolverConfig(strategy="baseline2d",
                                                P_target=8, v=v)))
     for name, cfg in configs:
+        spd = name in ("cholesky25d", "sequential_chol")
+        Ain = A_spd if spd else A
         hits0 = plan_cache_stats()["hits"]
         p = plan(N, cfg)
-        res = p.execute(A)            # warm compile
+        res = p.execute(Ain)          # warm compile
         p2 = plan(N, cfg)             # must be a cache hit, no re-trace
         dts = []
         for _ in range(3):            # best-of-3: the shared container is noisy
-            t0 = time.perf_counter(); res = p2.execute(A)
+            t0 = time.perf_counter(); res = p2.execute(Ain)
             dts.append(time.perf_counter() - t0)
         dt = min(dts)
         hits = plan_cache_stats()["hits"] - hits0
         rec = np.asarray(res.reconstruct())
-        err = float(np.abs(rec - A).max() / np.abs(A).max())
+        err = float(np.abs(rec - Ain).max() / np.abs(Ain).max())
         x = np.asarray(res.solve(b))
-        solve_err = float(np.abs(A @ x - b).max())
+        solve_err = float(np.abs(Ain @ x - b).max())
         comm = res.comm.get("total", 0.0)
         P_used = res.grid.P_used if res.grid else 1
         if res.grid is None:
             model = 0.0
         elif name == "baseline2d":
             model = scalapack2d_model(N, P_used)
+        elif spd:
+            model = chol_model(N, P_used, M=max(N * N * res.grid.c / P_used, 4.0))
         else:
             model = conflux_model(N, P_used, M=max(N * N * res.grid.c / P_used, 4.0))
         backend = p.config.backend
@@ -95,8 +108,26 @@ for (name, N, backend), r in sorted(by_key.items()):
         })
 for d in deltas:
     print(f"# delta {d['strategy']} N={d['N']}: pallas/ref = {d['pallas_over_ref']:.2f}x")
+
+# conflux-vs-cholesky comm volume at equal (N, grid) — the symmetric schedule
+# should move roughly half the elements per processor (~2x fewer).
+chol_vs_lu = []
+for (name, N, backend), r in sorted(by_key.items()):
+    if name != "cholesky25d" or backend != "ref":
+        continue
+    lu = by_key.get(("conflux", N, "ref"))
+    if lu and r["comm_per_proc_elements"]:
+        chol_vs_lu.append({
+            "N": N, "grid": r["grid"],
+            "lu_per_proc_elements": lu["comm_per_proc_elements"],
+            "chol_per_proc_elements": r["comm_per_proc_elements"],
+            "lu_over_chol": lu["comm_per_proc_elements"] / r["comm_per_proc_elements"],
+        })
+for d in chol_vs_lu:
+    print(f"# comm {d['grid']} N={d['N']}: lu/cholesky = {d['lu_over_chol']:.2f}x")
 print("BENCH_JSON:" + json.dumps({"measured": records,
                                   "backend_delta": deltas,
+                                  "chol_vs_lu": chol_vs_lu,
                                   "plan_cache": plan_cache_stats()}))
 """
 

@@ -29,13 +29,15 @@ _ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 BENCH_JSON = os.path.join(_ROOT, "BENCH_lu.json")
 BENCH_SMOKE_JSON = os.path.join(_ROOT, "BENCH_lu.smoke.json")
 
-SCHEMA = "BENCH_lu.v2"
+SCHEMA = "BENCH_lu.v3"
 _MEASURED_KEYS = {
     "strategy", "backend", "N", "grid", "wall_us_per_call", "reconstruction_err",
     "solve_err", "comm_per_proc_elements", "model_per_proc_elements",
     "trace_count", "plan_cache_hits",
 }
 _DELTA_KEYS = {"strategy", "N", "ref_us", "pallas_us", "pallas_over_ref"}
+_CHOL_KEYS = {"N", "grid", "lu_per_proc_elements", "chol_per_proc_elements",
+              "lu_over_chol"}
 _CACHE_KEYS = {"hits", "misses", "evictions", "size", "capacity"}
 
 
@@ -67,12 +69,31 @@ def validate_bench(path: str = BENCH_JSON, mode: str = "full") -> list[str]:
     backends = {r.get("backend") for r in measured}
     if measured and not {"ref", "pallas"} <= backends:
         errors.append(f"measured must cover both kernel backends, saw {sorted(map(str, backends))}")
+    chol_backends = {r.get("backend") for r in measured
+                     if r.get("strategy") == "cholesky25d"}
+    if measured and not {"ref", "pallas"} <= chol_backends:
+        errors.append(
+            f"measured must carry cholesky25d rows on both kernel backends, "
+            f"saw {sorted(map(str, chol_backends))}"
+        )
     for i, d in enumerate(bench.get("backend_delta", [])):
         missing = _DELTA_KEYS - set(d)
         if missing:
             errors.append(f"backend_delta[{i}] missing keys: {sorted(missing)}")
     if measured and not bench.get("backend_delta"):
         errors.append("missing section: backend_delta (ref-vs-pallas wall-time rows)")
+    chol_vs_lu = bench.get("chol_vs_lu")
+    if measured and not chol_vs_lu:
+        errors.append("missing section: chol_vs_lu (conflux-vs-cholesky comm rows)")
+    for i, d in enumerate(chol_vs_lu or []):
+        missing = _CHOL_KEYS - set(d)
+        if missing:
+            errors.append(f"chol_vs_lu[{i}] missing keys: {sorted(missing)}")
+        elif not d["lu_over_chol"] > 1.0:
+            errors.append(
+                f"chol_vs_lu[{i}]: expected the symmetric schedule to move "
+                f"fewer elements than LU, got ratio {d['lu_over_chol']}"
+            )
     cache = bench.get("plan_cache")
     if not isinstance(cache, dict) or not _CACHE_KEYS <= set(cache):
         errors.append(f"plan_cache must carry {sorted(_CACHE_KEYS)}, got {cache}")
@@ -114,7 +135,8 @@ def main() -> None:
 
     if not skip_measured:
         title = "smoke (N=64)" if smoke else "8 host devices"
-        _section(f"Executed distributed LU via plan/execute, ref + pallas backends ({title})")
+        _section(f"Executed distributed LU + Cholesky via plan/execute, "
+                 f"ref + pallas backends ({title})")
         from benchmarks import lu_measured
 
         measured = lu_measured.main(smoke=smoke)

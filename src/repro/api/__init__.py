@@ -11,7 +11,7 @@
 
 Strategies plug in through `@register_strategy("name")` — see
 `repro.api.strategies` for the built-ins (sequential / conflux /
-baseline2d / auto).  Local compute routes through a `KernelBackend`
+baseline2d / auto for LU; sequential_chol / cholesky25d for SPD).  Local compute routes through a `KernelBackend`
 (`SolverConfig.backend`: "ref" jnp paths or "pallas" MXU-tiled kernels).
 Plans are cached by (N, dtype, strategy, pivot, grid, v, backend) in an
 LRU-bounded cache; `plan_cache_stats()` exposes hit/miss/eviction counters
@@ -35,8 +35,18 @@ from repro.core.lu.grid import GridConfig, optimize_grid, validate_layout
 import repro.api.strategies  # noqa: E402,F401  (registers the built-ins)
 
 
-def comm_volume(N: int, grid: GridConfig, pivot: str = "tournament") -> dict:
-    """Instrumented per-processor communication volume of the schedule."""
+def comm_volume(N: int, grid: GridConfig, pivot: str = "tournament",
+                kind: str = "lu") -> dict:
+    """Instrumented per-processor communication volume of the schedule.
+
+    kind="lu" counts the COnfLUX schedule (pivot selects tournament/partial
+    accounting); kind="cholesky" counts the SPD 2.5D schedule (no pivoting,
+    symmetric trailing update — roughly half the LU volume at equal grid).
+    """
+    if kind == "cholesky":
+        from repro.core.cholesky.conflux25d import chol_comm_volume
+
+        return chol_comm_volume(N, grid)
     from repro.core.lu.conflux import lu_comm_volume
 
     return lu_comm_volume(N, grid, pivot=pivot)

@@ -14,7 +14,11 @@ import numpy as np
 
 from repro.core.lu.grid import GridConfig
 
-PIVOTS = ("tournament", "partial")
+PIVOTS = ("tournament", "partial", "none")
+
+# The computation dtype used when a caller gives none (and what the legacy
+# shims normalize integer/bool matrices to).
+DEFAULT_DTYPE = "float32"
 
 
 @dataclass(frozen=True)
@@ -22,9 +26,13 @@ class SolverConfig:
     """Declarative solver selection.
 
     strategy: a registered strategy name ("auto", "conflux", "baseline2d",
-        "sequential", ...).  "auto" runs Processor Grid Optimization over the
-        available devices and falls back to "sequential" on one device.
+        "sequential", "cholesky25d", "sequential_chol", ...).  "auto" runs
+        Processor Grid Optimization over the available devices and falls
+        back to "sequential" on one device.
     pivot:    "tournament" (COnfLUX butterfly) or "partial" (ScaLAPACK-style).
+              "none" is Cholesky-only — pivoting is meaningless for SPD
+              matrices, so the Cholesky strategies normalize any requested
+              pivot to "none" at resolve time and the LU strategies reject it.
     grid:     explicit GridConfig; None lets the strategy choose one.
     dtype:    computation dtype (normalized to its numpy name, so configs hash).
     M:        fast-memory budget per processor, in elements (drives the
@@ -42,14 +50,27 @@ class SolverConfig:
     strategy: str = "auto"
     pivot: str = "tournament"
     grid: GridConfig | None = None
-    dtype: str = "float32"
+    dtype: str = DEFAULT_DTYPE
     M: float = 2.0**14
     P_target: int | None = None
     v: int | None = None
     backend: str = "ref"
 
     def __post_init__(self):
-        object.__setattr__(self, "dtype", np.dtype(self.dtype).name)
+        dt = np.dtype(self.dtype)
+        if dt.kind == "c":
+            raise ValueError(
+                f"complex dtype {dt.name!r} is not supported; factorize the real "
+                f"and imaginary parts separately or use a real 2N x 2N embedding"
+            )
+        if dt.kind != "f":
+            raise ValueError(
+                f"SolverConfig.dtype must be an inexact (floating) dtype — the "
+                f"factorizations divide by pivots inside jitted loops, so "
+                f"{dt.name!r} would fail deep in tracing with a carry-type "
+                f"error; cast the matrix or pass dtype='float32'/'float64'"
+            )
+        object.__setattr__(self, "dtype", dt.name)
         if self.pivot not in PIVOTS:
             raise ValueError(f"unknown pivot {self.pivot!r}; choose from {PIVOTS}")
         if not isinstance(self.backend, str) or not self.backend:

@@ -43,12 +43,13 @@ class FactorizationPlan:
     """
 
     def __init__(self, N: int, config: SolverConfig, *, grid: GridConfig | None = None,
-                 mesh=None, comm: dict | None = None, run=None):
+                 mesh=None, comm: dict | None = None, run=None, kind: str = "lu"):
         self.N = N
         self.config = config
         self.grid = grid
         self.mesh = mesh
         self.comm = dict(comm or {})
+        self.kind = kind  # "lu" or "cholesky" — flows into the Factorization
         self.trace_count = 0
         self.execute_count = 0
         self._run = run  # (A: np.ndarray [N, N]) -> (F, rows); set by the builder
@@ -60,6 +61,12 @@ class FactorizationPlan:
     def execute(self, A) -> Factorization:
         """Factorize A [N, N] with the compiled program (no re-trace)."""
         A = np.asarray(A)
+        if A.dtype.kind == "c":
+            raise ValueError(
+                f"complex matrices are not supported (plan computes in "
+                f"{self.config.dtype}); factorize the real and imaginary parts "
+                f"separately or use a real 2N x 2N embedding"
+            )
         if A.dtype.kind == "f" and A.dtype.itemsize > np.dtype(self.config.dtype).itemsize:
             warnings.warn(
                 f"plan computes in {self.config.dtype}; input {A.dtype} will be "
@@ -74,6 +81,7 @@ class FactorizationPlan:
         return Factorization(
             F=F, rows=rows, grid=self.grid, comm=dict(self.comm),
             strategy=self.config.strategy, backend=self.config.backend,
+            kind=self.kind,
         )
 
     def __repr__(self):

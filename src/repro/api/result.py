@@ -6,16 +6,23 @@ factorization ran on, and the instrumented per-processor communication
 volume of the schedule.  Solves, determinants, and reconstruction are
 methods, each backed by a single module-level jitted program shared across
 instances (no per-result re-tracing).
+
+Two factorization kinds share the type: `kind="lu"` (packed masked LU,
+PA = LU) and `kind="cholesky"` (F holds the lower factor L with A = L L^T,
+rows is the identity).  The methods branch on `kind`, so serving code and
+the benchmarks consume both families through one interface.
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cholesky.sequential import chol_reconstruct, chol_solve
 from repro.core.lu.grid import GridConfig
 from repro.core.lu.sequential import permutation_sign, unpack_factors
 
@@ -41,6 +48,11 @@ def _packed_u_diag(F, rows):
     return F[rows, jnp.arange(n)]
 
 
+# jitted wrappers over the one implementation in core.cholesky.sequential
+_chol_solve = jax.jit(chol_solve)
+_chol_reconstruct = jax.jit(chol_reconstruct)
+
+
 @dataclass
 class Factorization:
     """Packed masked LU factors plus everything needed to consume them."""
@@ -51,6 +63,7 @@ class Factorization:
     comm: dict = field(default_factory=dict)
     strategy: str = ""
     backend: str = ""  # KernelBackend that ran the local compute ("ref"/"pallas")
+    kind: str = "lu"  # "lu" (F = packed masked LU) or "cholesky" (F = lower L)
 
     @property
     def N(self) -> int:
@@ -66,15 +79,38 @@ class Factorization:
         One jitted triangular-solve pair shared by all Factorization
         instances; a new RHS *shape* compiles once, then reuses.
         """
+        # Inspect the incoming dtype before jnp.asarray: without jax x64 the
+        # conversion itself silently demotes float64, which is exactly the
+        # downcast we must surface.  Only arrays carry dtype intent — a plain
+        # Python list defaults to float64 in numpy without meaning it, so the
+        # downcast warning fires for explicit dtypes only.
+        has_dtype = hasattr(b, "dtype")
+        in_dt = np.dtype(b.dtype) if has_dtype else np.asarray(b).dtype
+        if in_dt.kind == "c":
+            raise ValueError(
+                f"complex RHS dtype {in_dt.name} is not supported (factors are "
+                f"{self.dtype}); solve against b.real and b.imag separately"
+            )
+        if has_dtype and in_dt.kind == "f" and in_dt.itemsize > self.dtype.itemsize:
+            warnings.warn(
+                f"factors are {self.dtype}; RHS {in_dt.name} will be downcast "
+                f"(set SolverConfig.dtype to keep precision)",
+                stacklevel=2,
+            )
         b = jnp.asarray(b, dtype=self.dtype)
         if b.ndim not in (1, 2) or b.shape[0] != self.N:
             raise ValueError(
                 f"b must be [N] or [N, k] with N={self.N}, got shape {b.shape}"
             )
+        if self.kind == "cholesky":
+            return _chol_solve(jnp.asarray(self.F), b)
         return _packed_solve(jnp.asarray(self.F), jnp.asarray(self.rows), b)
 
     def slogdet(self):
         """(sign, log|det|) — overflow-safe; vectorized permutation sign."""
+        if self.kind == "cholesky":
+            d = jnp.diagonal(jnp.asarray(self.F))  # det(A) = prod(diag(L))^2 > 0
+            return jnp.ones((), d.dtype), 2.0 * jnp.sum(jnp.log(d))
         d = _packed_u_diag(jnp.asarray(self.F), jnp.asarray(self.rows))
         sign = permutation_sign(self.rows)
         return sign * jnp.prod(jnp.sign(d)), jnp.sum(jnp.log(jnp.abs(d)))
@@ -84,17 +120,21 @@ class Factorization:
         return s * jnp.exp(ld)
 
     def reconstruct(self):
-        """Rebuild A (original row order) from the packed factors."""
+        """Rebuild A (original row order) from the factors."""
+        if self.kind == "cholesky":
+            return _chol_reconstruct(jnp.asarray(self.F))
         return _packed_reconstruct(jnp.asarray(self.F), jnp.asarray(self.rows))
 
     def unpack(self):
-        """(P, L, U) with P @ A = L @ U."""
+        """LU: (P, L, U) with P @ A = L @ U.  Cholesky: the lower factor L."""
+        if self.kind == "cholesky":
+            return jnp.asarray(self.F)
         return unpack_factors(jnp.asarray(self.F), jnp.asarray(self.rows))
 
     def comm_report(self) -> str:
         """Human-readable instrumented communication volume (elements/proc)."""
         head = (f"strategy={self.strategy or '?'} backend={self.backend or '?'} "
-                f"grid={self.grid} N={self.N}")
+                f"kind={self.kind} grid={self.grid} N={self.N}")
         if not self.comm:
             return f"{head}\n  single-device: no inter-processor communication"
         lines = [head]

@@ -1,4 +1,5 @@
-"""Built-in strategies: sequential, conflux, baseline2d, auto.
+"""Built-in strategies: sequential, conflux, baseline2d, auto (LU) and
+sequential_chol, cholesky25d (SPD Cholesky on the same kernel backends).
 
 Each strategy is a plan builder ``(N, config, mesh=None) -> FactorizationPlan``
 plus an attached ``resolve(N, config) -> SolverConfig`` hook that pins the
@@ -32,6 +33,11 @@ def default_panel_width(N: int, start: int = 32) -> int:
 
 
 def _resolve_sequential(N: int, config: SolverConfig) -> SolverConfig:
+    if config.pivot == "none":
+        raise ValueError(
+            "pivot='none' is Cholesky-only (SPD needs no pivoting); LU "
+            "strategies need 'tournament' or 'partial'"
+        )
     v = config.v
     if v is None:
         v = default_panel_width(N)
@@ -73,6 +79,11 @@ build_sequential.resolve = _resolve_sequential
 
 
 def _resolve_conflux(N: int, config: SolverConfig) -> SolverConfig:
+    if config.pivot == "none":
+        raise ValueError(
+            "pivot='none' is Cholesky-only (SPD needs no pivoting); LU "
+            "strategies need 'tournament' or 'partial'"
+        )
     if config.grid is not None:
         return config
     P_target = config.P_target or len(jax.devices())
@@ -168,6 +179,110 @@ def build_baseline2d(N: int, config: SolverConfig, mesh=None) -> FactorizationPl
 
 
 build_baseline2d.resolve = _resolve_baseline2d
+
+
+# ---------------------------------------------------------------------------
+# cholesky25d / sequential_chol — the SPD family (arXiv:2108.09337) on the
+# same kernel-backend layer: no pivoting, symmetric rank-v Schur update,
+# roughly half the FLOPs and communication of the LU siblings.
+# ---------------------------------------------------------------------------
+
+
+def _resolve_sequential_chol(N: int, config: SolverConfig) -> SolverConfig:
+    v = config.v
+    if v is None:
+        v = default_panel_width(N)
+    elif not 1 <= v <= N or N % v:
+        raise ValueError(
+            f"sequential_chol strategy needs a panel width dividing N: v={v}, N={N}"
+        )
+    # Pivoting is meaningless for SPD: normalize so every requested pivot
+    # resolves to (and cache-shares) the same plan.
+    return config.with_(v=v, grid=None, pivot="none")
+
+
+@register_strategy("sequential_chol")
+def build_sequential_chol(N: int, config: SolverConfig, mesh=None) -> FactorizationPlan:
+    from repro.core.cholesky.sequential import chol_blocked_sequential
+
+    v = config.v
+    backend = config.backend
+    p = FactorizationPlan(N, config, kind="cholesky")
+
+    def _traced(A):
+        p._note_trace()
+        return chol_blocked_sequential(A, v=v, backend=backend)
+
+    fn = jax.jit(_traced)
+
+    def run(A):
+        L = fn(jnp.asarray(A))
+        return np.asarray(L), np.arange(N, dtype=np.int64)
+
+    p._run = run
+    return p
+
+
+build_sequential_chol.resolve = _resolve_sequential_chol
+
+
+def _resolve_cholesky25d(N: int, config: SolverConfig) -> SolverConfig:
+    from repro.core.cholesky.conflux25d import chol_comm_volume
+
+    changes: dict = {"pivot": "none"} if config.pivot != "none" else {}
+    if config.grid is None:
+        P_target = config.P_target or len(jax.devices())
+        changes["grid"] = optimize_grid(
+            N, P_target, config.M, v=config.v, volume=chol_comm_volume,
+        )
+    return config.with_(**changes) if changes else config
+
+
+@register_strategy("cholesky25d")
+def build_cholesky25d(N: int, config: SolverConfig, mesh=None) -> FactorizationPlan:
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.cholesky.conflux25d import _local_chol, chol_comm_volume
+    from repro.core.lu.conflux import (
+        block_cyclic_gather,
+        block_cyclic_scatter,
+        make_lu_mesh,
+    )
+
+    grid = config.grid
+    if grid is None:
+        raise ValueError("strategy 'cholesky25d' needs a resolved grid")
+    validate_layout(N, grid, pivot=config.pivot)  # "none": no pow-2 Px needed
+    mesh = mesh or make_lu_mesh(grid)
+    p = FactorizationPlan(
+        N, config, grid=grid, mesh=mesh,
+        comm=chol_comm_volume(N, grid), kind="cholesky",
+    )
+
+    def _traced(blocks):
+        p._note_trace()
+        return _local_chol(grid, config.backend, blocks)
+
+    fn = jax.jit(
+        _shard_map(
+            _traced,
+            mesh=mesh,
+            in_specs=P("px", "py", None, None),
+            out_specs=P("px", "py", None, None),
+        )
+    )
+
+    def run(A):
+        blocks = block_cyclic_scatter(A, grid.Px, grid.Py, grid.v)
+        Fblocks = fn(blocks)
+        L = block_cyclic_gather(np.asarray(Fblocks), N, grid.v)
+        return L, np.arange(N, dtype=np.int64)
+
+    p._run = run
+    return p
+
+
+build_cholesky25d.resolve = _resolve_cholesky25d
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,23 @@
+"""2.5D near-I/O-optimal Cholesky for SPD systems (arXiv:2108.09337).
+
+The second factorization family on the `KernelBackend` dispatch layer: the
+schedule (`conflux25d`) and the single-device oracle (`sequential`) consume
+the same local primitives as LU (panel factorization, TRSMs, Schur update)
+plus the SPD-only `panel_chol`, so both run on the "ref" and "pallas"
+backends without any backend-specific code here.  Strategies
+"cholesky25d" / "sequential_chol" register in `repro.api.strategies`.
+"""
+
+from repro.core.cholesky.sequential import (
+    chol_blocked_sequential,
+    chol_reconstruct,
+    chol_solve,
+)
+from repro.core.cholesky.conflux25d import chol_comm_volume
+
+__all__ = [
+    "chol_blocked_sequential",
+    "chol_solve",
+    "chol_reconstruct",
+    "chol_comm_volume",
+]

@@ -1,0 +1,150 @@
+"""2.5D near-communication-optimal Cholesky (follow-up paper arXiv:2108.09337).
+
+The SPD specialization of the COnfLUX schedule (`repro.core.lu.conflux`):
+same P = Px*Py*c (px, py, pz) mesh, same v x v tile-block-cyclic layout,
+same 2.5D replication (layer 0 stores the base matrix, layer t % c absorbs
+step t's Schur update, the current value of any entry is the sum over pz).
+What SPD removes is the whole pivoting apparatus — the tournament, the row
+masking, the pivot-order vector — and what symmetry halves is the trailing
+update: U01 is L10^T, so the rank-v update only has to cover the lower
+triangle of the Schur complement.
+
+Schedule per step t:
+  1. reduce the panel block-column over pz                        (psum 'pz')
+  2. gather the diagonal block to every processor                 (psum 'px','py')
+  3. L00 := panel_chol(A00), replicated local compute             (local)
+  4. L10 := A10 (L00^T)^-1 on the owner column; broadcast         (psum 'py')
+  5. gather the diagonal block-row; U01 := L00^-1 A01 (= L10^T)   (psum 'px','pz')
+  6. Schur update A11 -= L10 @ U01 on layer t % c                 (local GEMM)
+  7. write L10 / L00 into the output factor                       (local)
+
+The same SPMD note as the LU port applies: XLA:CPU requires every device to
+join every collective, so the executed collectives are unconditional with
+masked payloads; `chol_comm_volume` instruments the exact schedule volume —
+and, for the symmetric trailing update, counts L10/U01 fragments only
+toward the processors whose lower-triangle share needs them, which is where
+the ~2x saving over LU shows up at equal (N, grid).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lu.cost_models import chol_model
+from repro.core.lu.grid import GridConfig
+from repro.kernels.backend import get_backend
+
+
+def _local_chol(cfg: GridConfig, backend: str, Aloc):
+    """Local program for device (px, py, pz).  Aloc: [1, 1, R, C] local block.
+
+    Returns the local block of the lower Cholesky factor L (A = L L^T).
+    backend: registered KernelBackend name supplying panel_chol /
+    trsm_right_upper / trsm_left_lower / schur_update.
+    """
+    bk = get_backend(backend)
+    Px, Py, c, v, N = cfg.Px, cfg.Py, cfg.c, cfg.v, cfg.N
+    px = jax.lax.axis_index("px")
+    py = jax.lax.axis_index("py")
+    pz = jax.lax.axis_index("pz")
+    Aloc = Aloc[0, 0]
+    R, C = Aloc.shape
+    dtype = Aloc.dtype
+    nsteps = N // v
+
+    # Global ids of my local rows / cols (tile-cyclic) — same layout as LU.
+    lrow = jnp.arange(R)
+    lcol = jnp.arange(C)
+    row_gid = ((lrow // v * Px + px) * v + lrow % v).astype(jnp.int32)
+    col_gid = ((lcol // v * Py + py) * v + lcol % v).astype(jnp.int32)
+
+    # Layer pz==0 holds the base matrix; other layers accumulate partials only.
+    Aloc = jnp.where(pz == 0, Aloc, jnp.zeros_like(Aloc))
+    Floc = jnp.zeros_like(Aloc)
+
+    def step(t, carry):
+        Aloc, Floc = carry
+        lc0 = (t // Py) * v  # local tile-column index of the panel (owner py)
+        is_owner_col = py == (t % Py)
+        ow = is_owner_col.astype(dtype)
+
+        # -- 1. Reduce the panel block-column over pz. ------------------------
+        my_panel = jax.lax.dynamic_slice(Aloc, (0, lc0), (R, v))
+        panel = jax.lax.psum(my_panel, "pz")  # base + all pending partials
+
+        # -- 2. Gather the diagonal block to every processor. -----------------
+        diag_gids = t * v + jnp.arange(v, dtype=jnp.int32)
+        S = (row_gid[:, None] == diag_gids[None, :]).astype(dtype)  # [R, v]
+        A00 = jax.lax.psum(S.T @ (panel * ow), ("px", "py"))  # [v, v]
+
+        # -- 3. Factorize the diagonal block (replicated local compute). ------
+        L00 = bk.panel_chol(A00)
+
+        # -- 4. L10 on the owner column, broadcast along py. ------------------
+        below = (row_gid >= (t + 1) * v).astype(dtype)  # [R]
+        L10_own = bk.trsm_right_upper(panel * below[:, None], L00.T)
+        L10 = jax.lax.psum(L10_own * ow, "py")  # [R, v]
+
+        # -- 5. Diagonal block-row gathered over (px, pz); TRSM -> U01. -------
+        #    By symmetry A01 = L00 @ L10^T, so U01 is L10^T — computed from
+        #    the gathered row values exactly like LU's step 5 (unit=False:
+        #    the Cholesky L00 carries its diagonal).
+        R01 = jax.lax.psum(S.T @ Aloc, ("px", "pz"))  # [v, C] current values
+        trailing = (col_gid >= (t + 1) * v).astype(dtype)  # [C]
+        U01 = bk.trsm_left_lower(L00, R01, unit=False) * trailing[None, :]
+
+        # -- 6. Symmetric rank-v Schur update on layer t % c. -----------------
+        on_layer = (pz == (t % c)).astype(dtype)
+        Aloc = bk.schur_update(Aloc, L10 * (on_layer * below)[:, None], U01)
+
+        # -- 7. Write the factor panel: L10 below the diagonal, L00 on it. ----
+        Fpanel = L10 * below[:, None] + S @ L00
+        panel_cols = (col_gid >= t * v) & (col_gid < (t + 1) * v)  # [C]
+        Floc = jnp.where(
+            panel_cols[None, :],
+            jax.lax.dynamic_update_slice(Floc, Fpanel, (0, lc0)),
+            Floc,
+        )
+        return (Aloc, Floc)
+
+    _, Floc = jax.lax.fori_loop(0, nsteps, step, (Aloc, Floc))
+    return Floc[None, None]
+
+
+# ---------------------------------------------------------------------------
+# Instrumented communication volume of the schedule (elements, per processor).
+# ---------------------------------------------------------------------------
+
+def chol_comm_volume(N: int, grid: GridConfig) -> dict:
+    """Exact per-collective accounting of the 2.5D Cholesky schedule.
+
+    Same counting rules as `lu_comm_volume` (ring all-reduce 2*S*(g-1)/g per
+    member, masked broadcast payload per receiver), with the SPD savings made
+    explicit: no tournament, the L00 broadcast carries only the lower
+    triangle, and the L10 broadcast / U01 gather count each fragment only
+    toward the processors whose *lower-triangle* share of the trailing
+    update consumes it — on average half of the py (resp. px) groups — which
+    is what puts the total at roughly half of LU's at equal (N, grid).
+    """
+    Px, Py, c, v = grid.Px, grid.Py, grid.c, grid.v
+    Ptot = Px * Py * c
+    vol = dict.fromkeys(("panel_reduce", "l00_bcast", "l10_bcast", "u01_gather"), 0.0)
+    for t in range(N // v):
+        rem = max(N - (t + 1) * v, 0)  # trailing size
+        rloc = (N - t * v) / Px  # panel rows per owner-column proc
+        cloc = rem / Py  # trailing cols per proc
+        # 1. panel reduce over pz: owner column only (Px procs x c layers).
+        vol["panel_reduce"] += Px * c * (2 * rloc * v * (c - 1) / c)
+        # 2/3. lower triangle of L00 to every proc (no pivot ids to ship).
+        vol["l00_bcast"] += Ptot * v * (v + 1) / 2
+        # 4. L10 to the Schur layer — only the py groups whose lower-triangle
+        #    columns sit at or below each row fragment: half of Py on average.
+        vol["l10_bcast"] += Px * Py * (rem / Px) * v / 2
+        # 5. diagonal-row gather + U01 (= L10^T) to the Schur layer — only the
+        #    px groups whose rows sit at or below each column: half of Px.
+        vol["u01_gather"] += Px * Py * v * cloc / 2
+    out = {k: val / Ptot for k, val in vol.items()}
+    out["total"] = sum(out.values())
+    out["model_chol"] = chol_model(N, Ptot, M=max(N * N * c / Ptot, 4.0), v=v)
+    return out

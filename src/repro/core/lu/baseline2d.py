@@ -36,10 +36,14 @@ def scalapack2d_lu(A, P_target: int | None = None, v: int = 32, mesh=None) -> Fa
     compiled plan is cached and reused across calls.
     """
     from repro.api import SolverConfig, plan
+    from repro.api.config import DEFAULT_DTYPE
 
     A = np.asarray(A)
+    # Same integer/bool normalization as conflux_lu: legacy callers passed
+    # whatever ndarray they had; compute in the solver default float dtype.
+    dtype = A.dtype.name if A.dtype.kind not in "iub" else DEFAULT_DTYPE
     cfg = SolverConfig(
-        strategy="baseline2d", pivot="partial", dtype=A.dtype.name,
+        strategy="baseline2d", pivot="partial", dtype=dtype,
         P_target=P_target, v=v,
     )
     return plan(A.shape[0], cfg, mesh=mesh).execute(A)

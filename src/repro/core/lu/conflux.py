@@ -274,10 +274,16 @@ def conflux_lu(A, grid: GridConfig | None = None, P_target: int | None = None,
     instrumented per-processor communication volume of the schedule.
     """
     from repro.api import SolverConfig, plan
+    from repro.api.config import DEFAULT_DTYPE
 
     A = np.asarray(A)
+    # Integer/bool matrices: compute in the solver default float dtype — an
+    # integer dtype would otherwise reach the jitted fori_loop and die with
+    # an opaque carry-type error.  (Complex stays as-is so SolverConfig can
+    # reject it with an actionable message.)
+    dtype = A.dtype.name if A.dtype.kind not in "iub" else DEFAULT_DTYPE
     cfg = SolverConfig(
-        strategy="conflux", pivot=pivot, grid=grid, dtype=A.dtype.name,
+        strategy="conflux", pivot=pivot, grid=grid, dtype=dtype,
         M=float(M), P_target=P_target, backend=backend,
     )
     return plan(A.shape[0], cfg, mesh=mesh).execute(A)

@@ -49,6 +49,29 @@ def conflux_model(N: float, P: int, M: float, v: float | None = None) -> float:
     return conflux_io_cost(N, P, M, v=v)
 
 
+def chol_model(N: float, P: int, M: float, v: float | None = None) -> float:
+    """2.5D Cholesky (follow-up paper arXiv:2108.09337): ~N^3/(2 P sqrt(M)).
+
+    The SPD specialization of the COnfLUX accounting: the symmetric rank-v
+    update halves the panel-broadcast leading term, the tournament term
+    disappears (no pivoting), and the diagonal-block scatter carries only
+    the lower triangle.  Lower-order c-layer reduction terms are unchanged.
+    """
+    c = max(P * M / N**2, 1.0)
+    if v is None:
+        v = max(c, 1.0)
+    steps = N / v
+    q = 0.0
+    for t in range(1, int(steps) + 1):
+        rem = N - t * v
+        if rem <= 0:
+            break
+        q += N * v * rem / (P * math.sqrt(M))  # L10/U01 broadcasts (half of LU's)
+        q += 2 * rem * v * M / (N**2)  # c-layer reductions
+        q += v * (v + 1) / 2 + rem * v / P  # L00 lower triangle + panel scatter
+    return q
+
+
 COMM_MODELS = {
     "LibSci": scalapack2d_model,
     "SLATE": slate_model,

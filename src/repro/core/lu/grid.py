@@ -72,7 +72,8 @@ def _pow2_divisors_leq(n: int, cap: int):
 
 
 def optimize_grid(
-    N: int, P: int, M: float, v: int | None = None, max_waste: float = 0.5
+    N: int, P: int, M: float, v: int | None = None, max_waste: float = 0.5,
+    volume=None,
 ) -> GridConfig:
     """Search [Px, Py, c] x v minimizing the instrumented per-proc volume.
 
@@ -82,8 +83,16 @@ def optimize_grid(
     the layout, and scores with the exact schedule counter.  The replication
     factor is memory-bounded: the local matrix share N^2*c/P must fit in M,
     i.e. c <= P*M/N^2.
+
+    volume: the schedule counter to score with, ``(N, grid) -> {"total": ...}``;
+    defaults to the COnfLUX LU counter.  The Cholesky resolve hook passes
+    `chol_comm_volume` so SPD grids minimize the symmetric schedule's volume
+    rather than LU's (which includes tournament traffic Cholesky never sends).
     """
-    from repro.core.lu.conflux import lu_comm_volume  # local import: no cycle at module load
+    if volume is None:
+        from repro.core.lu.conflux import lu_comm_volume  # local import: no cycle at module load
+
+        volume = lu_comm_volume
 
     best: tuple[float, GridConfig] | None = None
     c_max = max(min(int(P * M / N**2), P), 1)
@@ -110,7 +119,7 @@ def optimize_grid(
                 if N % (vv * Px) or N % (vv * Py) or vv * max(Px, Py) > N:
                     continue
                 cfg = GridConfig(Px=Px, Py=Py, c=c, v=vv, N=N)
-                cost = lu_comm_volume(N, cfg)["total"]
+                cost = volume(N, cfg)["total"]
                 if best is None or cost < best[0]:
                     best = (cost, cfg)
     if best is None:

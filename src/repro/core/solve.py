@@ -34,6 +34,7 @@ def _warn(name: str):
 def _factorize(A, v: int = 32, distributed: bool | None = None, **kw):
     """Shared shim body: map the legacy knobs onto a SolverConfig."""
     from repro.api import SolverConfig, plan
+    from repro.api.config import DEFAULT_DTYPE
     from repro.api.strategies import default_panel_width
 
     A = np.asarray(A)
@@ -52,7 +53,10 @@ def _factorize(A, v: int = 32, distributed: bool | None = None, **kw):
         strategy=strategy,
         pivot=kw.pop("pivot", "tournament"),
         grid=grid,
-        dtype=A.dtype.name if A.dtype.kind == "f" else "float32",
+        # int/bool -> default float; complex passes through so SolverConfig
+        # rejects it with an actionable error instead of silently dropping
+        # the imaginary parts.
+        dtype=A.dtype.name if A.dtype.kind not in "iub" else DEFAULT_DTYPE,
         M=float(kw.pop("M", 2.0**14)),
         P_target=kw.pop("P_target", None),
         v=default_panel_width(N, start=v) if strategy in ("sequential", "auto") else None,

@@ -8,8 +8,9 @@ implementation of those primitives; the strategies call the backend instead
 of inlining jnp math, so swapping "ref" (pure jnp, any dtype) for "pallas"
 (the MXU-tiled kernels — interpret mode on CPU, Mosaic on TPU), or adding a
 future fused backend, touches no schedule code.  The follow-up paper
-(arXiv:2108.09337) builds Cholesky/QR from the same local kernels, so new
-factorizations become backend consumers for free.
+(arXiv:2108.09337) builds Cholesky/QR from the same local kernels, and the
+Cholesky family (`repro.core.cholesky`) is the first such consumer: it adds
+only the SPD `panel_chol` primitive and reuses the TRSMs and Schur update.
 
 Selection flows from `SolverConfig.backend` through plan resolution
 (`repro.api.plan.resolve`), which validates the name and auto-falls back
@@ -44,6 +45,13 @@ class KernelBackend(Protocol):
 
         Returns (F [R, v] packed factors, order [v] int32 pivot rows,
         ok [v] bool validity)."""
+        ...
+
+    def panel_chol(self, A: jax.Array) -> jax.Array:
+        """Lower Cholesky factor of an SPD diagonal block A [v, v] = L L^T.
+
+        The SPD analogue of `panel_lup`: no pivoting, no masking (positive
+        pivots are guaranteed).  Returns L with a zeroed upper triangle."""
         ...
 
     def trsm_right_upper(self, B: jax.Array, U: jax.Array) -> jax.Array:
@@ -116,6 +124,9 @@ class RefBackend:
     def panel_lup(self, panel, weights, v):
         return masked_lup(panel, weights, v)
 
+    def panel_chol(self, A):
+        return jnp.linalg.cholesky(A)
+
     def trsm_right_upper(self, B, U):
         return jax.scipy.linalg.solve_triangular(U.T, B.T, lower=True).T
 
@@ -138,6 +149,11 @@ class PallasBackend:
 
         F, order, ok = ops.lu_panel(panel, weights.astype(panel.dtype))
         return F, order, ok != 0
+
+    def panel_chol(self, A):
+        from repro.kernels import ops
+
+        return ops.chol_panel(A)
 
     def trsm_right_upper(self, B, U):
         from repro.kernels import ops

@@ -11,6 +11,7 @@ import functools
 
 import jax
 
+from repro.kernels import chol_panel as _cp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import lu_panel as _lp
 from repro.kernels import mamba_scan as _ms
@@ -32,6 +33,11 @@ def schur_update(A, L, U, bm=128, bn=128, bk=128, interpret=None):
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def lu_panel(panel, weights, interpret=None):
     return _lp.lu_panel(panel, weights, interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def chol_panel(A, interpret=None):
+    return _cp.chol_panel(A, interpret=_interp(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("br", "interpret"))

@@ -19,6 +19,10 @@ def lu_panel(panel, weights):
     return F, order.astype(jnp.int32), ok.astype(jnp.int32)
 
 
+def chol_panel(A):
+    return jnp.linalg.cholesky(A.astype(jnp.float32)).astype(A.dtype)
+
+
 def trsm_right_upper(B, U):
     X = jax.scipy.linalg.solve_triangular(
         U.astype(jnp.float32).T, B.astype(jnp.float32).T, lower=True

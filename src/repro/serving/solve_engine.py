@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import time
 
+import jax
 import numpy as np
 
 from repro.api import Factorization, SolverConfig, plan, plan_cache_stats
@@ -47,7 +48,10 @@ class SolveEngine:
         """Factorize A and solve A x = b (b: [N] or [N, k] multi-RHS)."""
         fact = self.factor(A)
         t0 = time.perf_counter()
-        x = fact.solve(b)
+        # block_until_ready: jax dispatch is async — without it the timer
+        # measures enqueue latency, not the solve (`stats()` would report
+        # near-zero `solve_s_total` regardless of N).
+        x = jax.block_until_ready(fact.solve(b))
         self._t_solve += time.perf_counter() - t0
         self._n_solve += 1
         return x
@@ -57,7 +61,7 @@ class SolveEngine:
         if self._last is None:
             raise RuntimeError("no factorization yet; call factor() or solve() first")
         t0 = time.perf_counter()
-        x = self._last.solve(b)
+        x = jax.block_until_ready(self._last.solve(b))
         self._t_solve += time.perf_counter() - t0
         self._n_solve += 1
         return x

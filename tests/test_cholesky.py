@@ -1,0 +1,220 @@
+"""cholesky25d / sequential_chol: the SPD family through the plan/execute API.
+
+Mirrors tests/test_backend_parity.py for the second factorization family on
+the KernelBackend dispatch layer: ref-vs-pallas parity end to end, solve
+residuals against scipy's cho_solve, the 8-device subprocess grid, comm
+volume at roughly half of conflux-LU, pivot normalization, plan-cache
+isolation, and the SolveEngine SPD serving path.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import scipy.linalg
+
+from repro.api import (
+    GridConfig,
+    SolverConfig,
+    clear_plan_cache,
+    comm_volume,
+    plan,
+    plan_cache_stats,
+    resolve,
+)
+from repro.serving.solve_engine import SolveEngine
+
+HERE = os.path.dirname(__file__)
+RNG = np.random.default_rng(21)
+
+
+def _spd(n, dtype="float32"):
+    B = RNG.standard_normal((n, n)).astype(dtype)
+    return B @ B.T / n + np.eye(n, dtype=dtype)
+
+
+def _config(strategy, backend, dtype, v, N):
+    if strategy == "cholesky25d":
+        return SolverConfig(strategy="cholesky25d", backend=backend, dtype=dtype,
+                            grid=GridConfig(Px=1, Py=1, c=1, v=v, N=N))
+    return SolverConfig(strategy=strategy, backend=backend, dtype=dtype, v=v)
+
+
+class TestEndToEndParity:
+    """Acceptance: both backends execute both Cholesky strategies via
+    plan(N, cfg) with allclose factors and cho_solve-accurate solves."""
+
+    @pytest.mark.parametrize("strategy", ["sequential_chol", "cholesky25d"])
+    @pytest.mark.parametrize("v", [8, 32])
+    def test_factors_match_and_solve_is_accurate(self, strategy, v):
+        N = 64
+        A = _spd(N)
+        b = RNG.standard_normal((N, 4)).astype(np.float32)
+        x_ref = scipy.linalg.cho_solve(
+            scipy.linalg.cho_factor(A.astype(np.float64), lower=True), b
+        )
+        facts = {}
+        for backend in ("ref", "pallas"):
+            fact = plan(N, _config(strategy, backend, "float32", v, N)).execute(A)
+            assert fact.kind == "cholesky"
+            facts[backend] = fact
+            L = np.asarray(fact.F)
+            assert np.abs(np.triu(L, 1)).max() == 0.0  # lower-triangular factor
+            assert np.abs(np.asarray(fact.reconstruct()) - A).max() < 1e-4
+            x = np.asarray(fact.solve(b))
+            assert np.abs(x - x_ref).max() < 1e-3
+        np.testing.assert_allclose(facts["ref"].F, facts["pallas"].F,
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_matches_lu_solve_on_the_same_system(self):
+        """Cholesky and LU agree on SPD input (cross-family consistency)."""
+        N = 48
+        A = _spd(N)
+        b = RNG.standard_normal(N).astype(np.float32)
+        x_chol = np.asarray(
+            plan(N, SolverConfig(strategy="sequential_chol", v=8)).execute(A).solve(b)
+        )
+        x_lu = np.asarray(
+            plan(N, SolverConfig(strategy="sequential", v=8)).execute(A).solve(b)
+        )
+        assert np.abs(x_chol - x_lu).max() < 1e-3
+
+    def test_eight_device_grid_subprocess(self):
+        """2x2x2 grid: every collective of the SPD schedule + scipy oracle."""
+        proc = subprocess.run(
+            [sys.executable, os.path.join(HERE, "multidev", "run_cholesky25d.py")],
+            capture_output=True,
+            text=True,
+            timeout=600,
+            env={**os.environ, "PYTHONPATH": os.path.join(HERE, "..", "src")},
+        )
+        assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}"
+        assert "ALL-OK" in proc.stdout
+
+
+class TestFactorizationKind:
+    def test_slogdet_and_det(self):
+        N = 32
+        A = _spd(N)
+        fact = plan(N, SolverConfig(strategy="sequential_chol", v=8)).execute(A)
+        s, ld = fact.slogdet()
+        s_np, ld_np = np.linalg.slogdet(A.astype(np.float64))
+        assert float(s) == pytest.approx(1.0)
+        assert float(ld) == pytest.approx(ld_np, rel=1e-3)
+        assert float(fact.det()) == pytest.approx(s_np * np.exp(ld_np), rel=1e-2)
+
+    def test_unpack_returns_lower_factor(self):
+        N = 32
+        A = _spd(N)
+        fact = plan(N, SolverConfig(strategy="sequential_chol", v=8)).execute(A)
+        L = np.asarray(fact.unpack())
+        np.testing.assert_allclose(L @ L.T, A, rtol=1e-4, atol=1e-4)
+
+    def test_comm_report_records_kind(self):
+        N = 32
+        fact = plan(N, SolverConfig(
+            strategy="cholesky25d", grid=GridConfig(Px=1, Py=1, c=1, v=8, N=N)
+        )).execute(_spd(N))
+        report = fact.comm_report()
+        assert "kind=cholesky" in report and "cholesky25d" in report
+
+
+class TestPivotAndValidation:
+    def test_pivot_normalizes_to_none(self):
+        """Any requested pivot resolves to "none" — pivoting is meaningless
+        for SPD, and normalizing keeps the plan-cache key canonical."""
+        N = 32
+        for pivot in ("tournament", "partial"):
+            cfg = resolve(N, SolverConfig(strategy="sequential_chol", pivot=pivot))
+            assert cfg.pivot == "none"
+        cfg = resolve(N, SolverConfig(
+            strategy="cholesky25d", pivot="partial",
+            grid=GridConfig(Px=1, Py=1, c=1, v=8, N=N),
+        ))
+        assert cfg.pivot == "none"
+
+    def test_pivot_normalization_shares_the_plan(self):
+        clear_plan_cache()
+        N = 32
+        p1 = plan(N, SolverConfig(strategy="sequential_chol", v=8, pivot="tournament"))
+        p2 = plan(N, SolverConfig(strategy="sequential_chol", v=8, pivot="partial"))
+        assert p1 is p2
+        assert plan_cache_stats()["hits"] == 1
+
+    def test_lu_strategies_reject_pivot_none(self):
+        with pytest.raises(ValueError, match="Cholesky-only"):
+            plan(32, SolverConfig(strategy="sequential", pivot="none"))
+        with pytest.raises(ValueError, match="Cholesky-only"):
+            plan(32, SolverConfig(strategy="conflux", pivot="none",
+                                  grid=GridConfig(Px=1, Py=1, c=1, v=8, N=32)))
+
+    def test_nonpow2_px_allowed_without_tournament(self):
+        """No butterfly -> no power-of-two Px constraint for Cholesky."""
+        N = 96
+        cfg = resolve(N, SolverConfig(strategy="cholesky25d",
+                                      grid=GridConfig(Px=3, Py=1, c=1, v=8, N=N)))
+        assert cfg.pivot == "none"  # resolves fine; building needs 3 devices
+
+    def test_cache_keys_isolated_from_lu(self):
+        clear_plan_cache()
+        N = 32
+        p_chol = plan(N, SolverConfig(strategy="sequential_chol", v=8))
+        p_lu = plan(N, SolverConfig(strategy="sequential", v=8))
+        assert p_chol is not p_lu
+        assert plan_cache_stats()["misses"] == 2
+
+    def test_pallas_f64_falls_back_to_ref(self):
+        """The strategy-agnostic pallas->ref fallback covers Cholesky too."""
+        with pytest.warns(UserWarning, match="falling back to 'ref'"):
+            cfg = resolve(32, SolverConfig(strategy="sequential_chol",
+                                           backend="pallas", dtype="float64", v=8))
+        assert cfg.backend == "ref"
+
+
+class TestCommVolume:
+    def test_roughly_half_of_lu_at_equal_grid(self):
+        """Acceptance: instrumented SPD volume ~ half of conflux-LU."""
+        for N, grid in ((64, GridConfig(Px=2, Py=2, c=2, v=8, N=64)),
+                        (256, GridConfig(Px=2, Py=2, c=2, v=16, N=256)),
+                        (512, GridConfig(Px=4, Py=2, c=1, v=32, N=512))):
+            lu = comm_volume(N, grid)["total"]
+            chol = comm_volume(N, grid, kind="cholesky")["total"]
+            assert 1.4 < lu / chol < 2.6, (N, grid, lu, chol)
+
+    def test_model_tracks_counter(self):
+        """The Lemma-style chol_model stays within a small factor of the
+        instrumented schedule counter, and below the LU model."""
+        from repro.core.lu.cost_models import chol_model, conflux_model
+
+        N, grid = 256, GridConfig(Px=2, Py=2, c=2, v=16, N=256)
+        vol = comm_volume(N, grid, kind="cholesky")
+        counter, model = vol["total"], vol["model_chol"]
+        assert model > 0
+        assert 1 / 4 < counter / model < 4, (counter, model)
+        M = max(N * N * grid.c / grid.P_used, 4.0)
+        assert chol_model(N, grid.P_used, M, v=grid.v) < conflux_model(
+            N, grid.P_used, M, v=grid.v
+        )
+
+
+class TestSPDServing:
+    def test_solve_engine_serves_cholesky(self):
+        """The serving story: repeated covariance-style SPD solves reuse one
+        compiled cholesky25d plan, stats record the strategy."""
+        clear_plan_cache()
+        N = 32
+        eng = SolveEngine(N, SolverConfig(
+            strategy="cholesky25d", grid=GridConfig(Px=1, Py=1, c=1, v=8, N=N)
+        ))
+        A = _spd(N)
+        b = RNG.standard_normal(N).astype(np.float32)
+        x = np.asarray(eng.solve(A, b))
+        assert np.abs(A @ x - b).max() < 1e-3
+        x2 = np.asarray(eng.resolve(2 * b))
+        assert np.abs(A @ x2 - 2 * b).max() < 2e-3
+        st = eng.stats()
+        assert st["strategy"] == "cholesky25d"
+        assert st["factorizations"] == 1 and st["solves"] == 2
+        assert eng.plan.trace_count == 1

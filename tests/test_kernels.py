@@ -58,6 +58,28 @@ class TestLuPanel:
         np.testing.assert_array_equal(np.asarray(gF)[[3, 5]], np.asarray(panel)[[3, 5]])
 
 
+class TestCholPanel:
+    @pytest.mark.parametrize("v", [8, 16, 32, 64])
+    def test_sweep(self, v):
+        B = _rand((v, v))
+        A = B @ B.T / v + 2.0 * jnp.eye(v)
+        got = ops.chol_panel(A)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.chol_panel(A)), rtol=2e-4, atol=2e-4
+        )
+        # L is a genuine lower Cholesky factor, not merely oracle-equal
+        np.testing.assert_array_equal(np.triu(np.asarray(got), 1), 0.0)
+        np.testing.assert_allclose(np.asarray(got @ got.T), np.asarray(A), rtol=2e-4, atol=2e-4)
+
+    def test_matches_numpy_float64_oracle(self):
+        v = 32
+        B = _rand((v, v))
+        A = np.asarray(B @ B.T / v + 2.0 * jnp.eye(v))
+        got = np.asarray(ops.chol_panel(jnp.asarray(A)))
+        want = np.linalg.cholesky(A.astype(np.float64))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
 class TestTrsm:
     @pytest.mark.parametrize("R,v", [(128, 16), (256, 32), (512, 64)])
     def test_right_upper(self, R, v):

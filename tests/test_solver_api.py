@@ -258,6 +258,83 @@ class TestLegacyShims:
             plan(2048, SolverConfig(strategy="auto", grid=big))
 
 
+class TestDtypeHandling:
+    """Regressions for the dtype-handling bugs: silent RHS downcasts,
+    integer dtypes crashing deep in tracing, and complex input."""
+
+    def test_solverconfig_rejects_noninexact_dtype(self):
+        """Before: SolverConfig('int64') passed validation and the plan died
+        inside fori_loop with 'carry input and carry output must have equal
+        types'.  Now: a clear ValueError at config construction."""
+        for bad in ("int64", "int32", "bool"):
+            with pytest.raises(ValueError, match="inexact"):
+                SolverConfig(dtype=bad)
+
+    def test_solverconfig_rejects_complex_dtype(self):
+        with pytest.raises(ValueError, match="complex"):
+            SolverConfig(dtype="complex64")
+
+    def test_conflux_shim_normalizes_integer_matrix(self):
+        """Before: conflux_lu(int matrix) forwarded dtype='int64' into
+        SolverConfig and crashed with a tracer TypeError."""
+        from repro.core.lu.conflux import conflux_lu
+
+        A = RNG.integers(-4, 5, (32, 32))
+        fact = conflux_lu(A, grid=GridConfig(Px=1, Py=1, c=1, v=8, N=32))
+        assert fact.dtype == np.float32
+        assert np.abs(np.asarray(fact.reconstruct()) - A).max() < 1e-4
+
+    def test_scalapack_shim_normalizes_bool_matrix(self):
+        from repro.core.lu.baseline2d import scalapack2d_lu
+
+        A = np.eye(32, dtype=bool)
+        fact = scalapack2d_lu(A, P_target=1, v=8)
+        assert fact.dtype == np.float32
+
+    def test_solve_warns_on_rhs_downcast(self):
+        """Before: Factorization.solve silently demoted a float64 RHS to the
+        factor dtype (jnp.asarray eats the precision without jax x64)."""
+        fact = factor(_rand(32), SolverConfig(strategy="sequential"))
+        with pytest.warns(UserWarning, match="downcast"):
+            fact.solve(np.zeros(32, np.float64))
+
+    def test_solve_same_dtype_is_silent(self):
+        import warnings
+
+        fact = factor(_rand(32), SolverConfig(strategy="sequential"))
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            fact.solve(np.zeros(32, np.float32))
+
+    def test_solve_rejects_complex_rhs(self):
+        fact = factor(_rand(32), SolverConfig(strategy="sequential"))
+        with pytest.raises(ValueError, match="complex"):
+            fact.solve(np.zeros(32, np.complex64))
+
+    def test_solve_accepts_python_list_rhs_silently(self):
+        """Plain sequences carry no dtype intent: no crash (np.result_type
+        would choke on a list) and no spurious float64-downcast warning."""
+        import warnings
+
+        fact = factor(_rand(32), SolverConfig(strategy="sequential"))
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            x = fact.solve([0.0] * 32)
+        assert np.asarray(x).shape == (32,)
+
+    def test_execute_rejects_complex_matrix(self):
+        """plan.execute only warned for wide floats; complex fell through to
+        an astype that silently discarded the imaginary parts."""
+        p = plan(32, SolverConfig(strategy="sequential", v=8))
+        with pytest.raises(ValueError, match="complex"):
+            p.execute(np.zeros((32, 32), np.complex64))
+
+    def test_execute_still_warns_on_matrix_downcast(self):
+        p = plan(32, SolverConfig(strategy="sequential", v=8))
+        with pytest.warns(UserWarning, match="downcast"):
+            p.execute(np.zeros((32, 32), np.float64))
+
+
 class TestRegistry:
     def test_register_and_duplicate_rejected(self):
         calls = []
@@ -302,3 +379,34 @@ class TestSolveEngine:
         eng = SolveEngine(16, strategy="sequential")
         with pytest.raises(RuntimeError, match="no factorization"):
             eng.resolve(np.zeros(16, np.float32))
+
+    def test_solve_timings_measure_blocked_compute(self):
+        """Regression: the timed regions in solve()/resolve() used to stop
+        the clock on an unblocked jax array — `solve_s_total` reported async
+        dispatch latency (~constant in N) instead of compute.  With
+        block_until_ready the counter must (a) cover the externally measured
+        blocked wall time and (b) grow with N."""
+        import time
+
+        import jax
+
+        reps, k = 3, 32
+        deltas = {}
+        for N in (64, 1024):
+            eng = SolveEngine(N, strategy="sequential")
+            A = _rand(N)
+            b = RNG.standard_normal((N, k)).astype(np.float32)
+            fact = eng.factor(A)
+            eng.resolve(b)  # warm: compile the solve for this RHS shape
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                jax.block_until_ready(fact.solve(b))
+            wall = time.perf_counter() - t0
+            s0 = eng.stats()["solve_s_total"]
+            for _ in range(reps):
+                eng.resolve(b)
+            deltas[N] = eng.stats()["solve_s_total"] - s0
+            # engine-attributed time covers the real blocked compute (the
+            # unblocked version reports a small constant fraction of it)
+            assert deltas[N] > 0.3 * wall, (N, deltas[N], wall)
+        assert deltas[1024] > deltas[64], deltas
