@@ -12,6 +12,13 @@ container) — so BENCH_lu.json carries the ref-vs-pallas wall-time delta and
 the conflux-vs-cholesky comm-volume ratio (~2x fewer elements/proc for the
 symmetric schedule) per PR; on real TPUs the same dispatch compiles to
 Mosaic.
+
+The ``hotloop`` rows (schema v4) A/B the shrinking-window + fused step body
+against the flat full-block baseline — full-run wall time for conflux and
+cholesky25d on both backends, plus the per-primitive breakdown (panel /
+trsm / schur / gather, fused vs unfused, indexed vs dense gather) from
+`FactorizationPlan.profile_hotloop` — the PR-over-PR perf trajectory of the
+hot loop itself.
 """
 
 from __future__ import annotations
@@ -109,6 +116,53 @@ for (name, N, backend), r in sorted(by_key.items()):
 for d in deltas:
     print(f"# delta {d['strategy']} N={d['N']}: pallas/ref = {d['pallas_over_ref']:.2f}x")
 
+# hotloop rows: windowed-vs-flat full-run wall time per (strategy, backend)
+# plus the per-primitive breakdown (panel / trsm / schur / gather and the
+# fused-vs-unfused / indexed-vs-dense deltas) profiled on the plan's shapes.
+# Measured on a 1x1x1 grid: the windowed/fused tentpole changes the *local*
+# step body, and on the in-process multi-device mesh the per-collective
+# rendezvous (~ms per psum on XLA:CPU, see the SPMD note in core.lu.conflux)
+# swamps the local-compute delta the rows are meant to track.
+hotloop_rows = []
+N_hot = 64 if SMOKE else 256
+A_hot = rng.standard_normal((N_hot, N_hot)).astype(np.float32)
+G_hot = rng.standard_normal((N_hot, N_hot)).astype(np.float32)
+Aspd_hot = G_hot @ G_hot.T / N_hot + np.eye(N_hot, dtype=np.float32)
+grid_hot = GridConfig(Px=1, Py=1, c=1, v=16, N=N_hot)
+for name in ("conflux", "cholesky25d"):
+    Ain = Aspd_hot if name == "cholesky25d" else A_hot
+    for backend in ("ref", "pallas"):
+        plans = {hl: plan(N_hot, SolverConfig(strategy=name, backend=backend,
+                                              grid=grid_hot, hotloop=hl))
+                 for hl in ("windowed", "flat")}
+        for p in plans.values():
+            p.execute(Ain)  # warm compile
+        # Interleaved best-of-7: these rows feed the CI perf gate via the
+        # windowed/flat ratio, and the shared container drifts through slow
+        # phases lasting whole seconds — alternating the two bodies sample
+        # by sample puts any phase on both sides of the ratio instead of
+        # poisoning one.
+        dts = {hl: [] for hl in plans}
+        for _ in range(7):
+            for hl, p in plans.items():
+                t0 = time.perf_counter(); p.execute(Ain)
+                dts[hl].append(time.perf_counter() - t0)
+        walls = {hl: min(ts) * 1e6 for hl, ts in dts.items()}
+        prims = {k: val for k, val in plans["windowed"].profile_hotloop().items()
+                 if isinstance(val, (int, float))}
+        hotloop_rows.append({
+            "strategy": name, "backend": backend, "N": N_hot,
+            "grid": str(grid_hot), "windowed_us": walls["windowed"],
+            "flat_us": walls["flat"],
+            "windowed_over_flat": walls["windowed"] / max(walls["flat"], 1e-9),
+            "primitives": prims,
+        })
+for d in hotloop_rows:
+    print(f"# hotloop {d['strategy']}/{d['backend']} N={d['N']}: "
+          f"windowed/flat = {d['windowed_over_flat']:.2f}x "
+          f"(schur {d['primitives'].get('schur_us', 0):.0f}us, "
+          f"fused {d['primitives'].get('fused_us', 0):.0f}us)")
+
 # conflux-vs-cholesky comm volume at equal (N, grid) — the symmetric schedule
 # should move roughly half the elements per processor (~2x fewer).
 chol_vs_lu = []
@@ -128,6 +182,7 @@ for d in chol_vs_lu:
 print("BENCH_JSON:" + json.dumps({"measured": records,
                                   "backend_delta": deltas,
                                   "chol_vs_lu": chol_vs_lu,
+                                  "hotloop": hotloop_rows,
                                   "plan_cache": plan_cache_stats()}))
 """
 

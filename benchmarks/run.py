@@ -12,9 +12,14 @@ a perf trajectory.
 ``--smoke`` runs the CI-sized subset (model tables + a small-N executed
 sweep over both kernel backends) and writes the full-schema JSON to
 ``BENCH_lu.smoke.json`` — a separate path so a local smoke run never
-clobbers the tracked full-run trajectory file.  ``--validate`` checks the
-full-run JSON (``--validate --smoke`` the smoke one) against the schema and
-exits non-zero on violations — CI runs smoke + validate and uploads the
+clobbers the tracked full-run trajectory file.  It then gates on perf: the
+freshly measured hotloop windowed/flat wall-time ratios are compared
+against the *committed* smoke baseline's and the run fails when any row
+regresses past ``SMOKE_GATE_TOLERANCE`` (2x; ratios rather than absolute
+times so the shared CI container's load swings cancel — the in-run flat
+body is the control).  ``--validate`` checks the full-run JSON
+(``--validate --smoke`` the smoke one) against schema v4 and exits non-zero
+on violations — CI runs smoke (with the gate) + validate and uploads the
 artifact.
 """
 
@@ -29,7 +34,7 @@ _ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 BENCH_JSON = os.path.join(_ROOT, "BENCH_lu.json")
 BENCH_SMOKE_JSON = os.path.join(_ROOT, "BENCH_lu.smoke.json")
 
-SCHEMA = "BENCH_lu.v3"
+SCHEMA = "BENCH_lu.v4"
 _MEASURED_KEYS = {
     "strategy", "backend", "N", "grid", "wall_us_per_call", "reconstruction_err",
     "solve_err", "comm_per_proc_elements", "model_per_proc_elements",
@@ -38,7 +43,19 @@ _MEASURED_KEYS = {
 _DELTA_KEYS = {"strategy", "N", "ref_us", "pallas_us", "pallas_over_ref"}
 _CHOL_KEYS = {"N", "grid", "lu_per_proc_elements", "chol_per_proc_elements",
               "lu_over_chol"}
+_HOTLOOP_KEYS = {"strategy", "backend", "N", "grid", "windowed_us", "flat_us",
+                 "windowed_over_flat", "primitives"}
+_PRIMITIVE_KEYS = {"panel_us", "trsm_us", "schur_us", "gather_us"}
 _CACHE_KEYS = {"hits", "misses", "evictions", "size", "capacity"}
+
+# Perf-regression gate: a freshly measured windowed/flat hotloop ratio may
+# exceed the committed baseline's by at most this factor.  The gate compares
+# *ratios*, not absolute wall times: windowed and flat run back-to-back in
+# the same process, so the shared CI container's 5-10x run-to-run load swings
+# cancel, and what remains is exactly what the gate protects — the windowed
+# step body regressing relative to the frozen flat oracle.  2x is generous;
+# it fires on step-function regressions, not jitter.
+SMOKE_GATE_TOLERANCE = 2.0
 
 
 def _section(title):
@@ -94,10 +111,63 @@ def validate_bench(path: str = BENCH_JSON, mode: str = "full") -> list[str]:
                 f"chol_vs_lu[{i}]: expected the symmetric schedule to move "
                 f"fewer elements than LU, got ratio {d['lu_over_chol']}"
             )
+    hotloop = bench.get("hotloop")
+    if measured and not hotloop:
+        errors.append("missing section: hotloop (windowed-vs-flat wall-time rows)")
+    for i, d in enumerate(hotloop or []):
+        missing = _HOTLOOP_KEYS - set(d)
+        if missing:
+            errors.append(f"hotloop[{i}] missing keys: {sorted(missing)}")
+            continue
+        pmissing = _PRIMITIVE_KEYS - set(d["primitives"])
+        if pmissing:
+            errors.append(f"hotloop[{i}] primitives missing: {sorted(pmissing)}")
+        if mode == "full" and d["backend"] == "ref" and not d["windowed_over_flat"] < 1.0:
+            errors.append(
+                f"hotloop[{i}] ({d['strategy']}/ref): windowed step body must "
+                f"beat the flat baseline, got ratio {d['windowed_over_flat']:.2f}"
+            )
+    if hotloop:
+        combos = {(d.get("strategy"), d.get("backend")) for d in hotloop}
+        want = {(s, b) for s in ("conflux", "cholesky25d") for b in ("ref", "pallas")}
+        if not want <= combos:
+            errors.append(
+                f"hotloop must cover conflux+cholesky25d on both backends, "
+                f"missing {sorted(want - combos)}"
+            )
     cache = bench.get("plan_cache")
     if not isinstance(cache, dict) or not _CACHE_KEYS <= set(cache):
         errors.append(f"plan_cache must carry {sorted(_CACHE_KEYS)}, got {cache}")
     return errors
+
+
+def smoke_gate(bench: dict, baseline: dict | None,
+               tol: float = SMOKE_GATE_TOLERANCE) -> tuple[list[str], int]:
+    """Compare freshly measured hotloop rows against the committed smoke
+    baseline; returns (regression messages, rows compared).
+
+    Keyed by (strategy, backend), comparing the windowed/flat wall-time
+    *ratio* (see SMOKE_GATE_TOLERANCE for why ratios: the in-run flat body
+    is the load-invariant control).  A baseline without hotloop rows (older
+    schema) or a missing row gates nothing — callers must report a
+    compared-count of 0 as "gate did not run", never as a pass.
+    """
+    base = {(d["strategy"], d["backend"]): d
+            for d in (baseline or {}).get("hotloop", [])
+            if isinstance(d, dict) and _HOTLOOP_KEYS <= set(d)}
+    regressions, compared = [], 0
+    for d in bench.get("hotloop", []):
+        ref = base.get((d["strategy"], d["backend"]))
+        if ref is None or ref.get("N") != d.get("N"):
+            continue
+        compared += 1
+        if d["windowed_over_flat"] > tol * ref["windowed_over_flat"]:
+            regressions.append(
+                f"{d['strategy']}/{d['backend']} N={d['N']}: windowed/flat "
+                f"ratio {d['windowed_over_flat']:.2f} vs baseline "
+                f"{ref['windowed_over_flat']:.2f} (> {tol:.1f}x tolerance)"
+            )
+    return regressions, compared
 
 
 def main() -> None:
@@ -114,6 +184,13 @@ def main() -> None:
 
     skip_measured = "--skip-measured" in sys.argv
     bench: dict = {"schema": SCHEMA, "mode": "smoke" if smoke else "full"}
+
+    # Load the committed smoke baseline *before* overwriting it: the perf
+    # gate below compares this run's hotloop rows against it.
+    baseline = None
+    if smoke and os.path.exists(BENCH_SMOKE_JSON):
+        with open(BENCH_SMOKE_JSON) as f:
+            baseline = json.load(f)
 
     _section("Table 2: communication volume models vs paper (GB)")
     t0 = time.perf_counter()
@@ -153,6 +230,19 @@ def main() -> None:
     with open(out_path, "w") as f:
         json.dump(bench, f, indent=1, default=str)
     print(f"\n# wrote {out_path}")
+
+    if smoke:
+        regressions, compared = smoke_gate(bench, baseline)
+        for r in regressions:
+            print(f"PERF-REGRESSION: {r}")
+        if regressions:
+            sys.exit(1)
+        if compared:
+            print(f"# perf gate: {compared} hotloop windowed/flat ratios within "
+                  f"{SMOKE_GATE_TOLERANCE:.1f}x of the committed baseline")
+        else:
+            print("# perf gate: SKIPPED — no committed baseline hotloop rows "
+                  "to compare against (commit BENCH_lu.smoke.json to arm it)")
 
 
 if __name__ == "__main__":

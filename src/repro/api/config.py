@@ -15,6 +15,7 @@ import numpy as np
 from repro.core.lu.grid import GridConfig
 
 PIVOTS = ("tournament", "partial", "none")
+HOTLOOPS = ("windowed", "flat")
 
 # The computation dtype used when a caller gives none (and what the legacy
 # shims normalize integer/bool matrices to).
@@ -45,6 +46,10 @@ class SolverConfig:
               auto-falls back pallas -> ref (with a warning) when the plan
               violates the kernels' tiling constraints (float64, v not a
               multiple of 8).
+    hotloop:  step-body variant of the 2.5D schedules — "windowed" (default:
+              shrinking power-of-two trailing windows, indexed pivot-row
+              gathers, fused TRSM->Schur) or "flat" (the full-block body,
+              kept as the bit-parity oracle and benchmark baseline).
     """
 
     strategy: str = "auto"
@@ -55,6 +60,7 @@ class SolverConfig:
     P_target: int | None = None
     v: int | None = None
     backend: str = "ref"
+    hotloop: str = "windowed"
 
     def __post_init__(self):
         dt = np.dtype(self.dtype)
@@ -77,6 +83,10 @@ class SolverConfig:
             raise ValueError(
                 f"backend must be a registered KernelBackend name, got {self.backend!r}"
             )
+        if self.hotloop not in HOTLOOPS:
+            raise ValueError(
+                f"unknown hotloop {self.hotloop!r}; choose from {HOTLOOPS}"
+            )
 
     def with_(self, **changes) -> "SolverConfig":
         """Functional update (dataclasses.replace with validation rerun)."""
@@ -89,4 +99,5 @@ class SolverConfig:
         backend); `plan()` resolves before keying, so a pallas plan and a ref
         plan of the same problem never share a cache entry.
         """
-        return (N, self.dtype, self.strategy, self.pivot, self.grid, self.v, self.backend)
+        return (N, self.dtype, self.strategy, self.pivot, self.grid, self.v,
+                self.backend, self.hotloop)

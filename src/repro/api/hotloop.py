@@ -1,0 +1,134 @@
+"""Per-primitive wall-time profiling of the factorization hot loop.
+
+The step bodies run inside one jitted `fori_loop` under shard_map, so the
+panel / TRSM / Schur / gather phases cannot be timed in situ without
+breaking the single-dispatch execution model.  Instead the profiler times
+each backend primitive standalone on the *representative local shapes* of
+the plan — the [R, v] panel, the [v, v] triangle, and the mid-schedule
+trailing window (the power-of-two bucket at t = nsteps/2, i.e. what an
+average step actually touches) — with `block_until_ready` around each call,
+best-of-`repeats`.
+
+Two extra rows quantify the tentpole's two levers directly:
+  gather_us       indexed pivot-row / diagonal-block movement (take or
+                  dynamic_slice, masked — whichever the strategy's windowed
+                  body actually runs)
+  gather_dense_us the one-hot S.T @ A matmul it replaced
+  fused_us        the fused TRSM->Schur primitive
+  trsm_us + schur_us   the unfused composition it replaced
+
+The profiled shapes and primitives follow the strategy kind: LU plans time
+panel_lup / trsm_left_lower(unit=True) / take-gather; Cholesky plans
+(pivot == "none") time panel_chol / trsm_right_upper against L00^T (its
+step-4 solve) / dynamic_slice diagonal-block movement, and the fused call
+runs unit=False — so the cholesky rows in BENCH_lu.json measure the body
+that strategy executes, not LU's.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.windows import window_buckets
+
+
+def _best_of(fn, *args, repeats: int = 3) -> float:
+    """Best-of-N wall time of `fn(*args)` in microseconds (post-warmup)."""
+    jax.block_until_ready(fn(*args))  # compile/trace outside the timer
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def profile_primitives(N: int, config, grid=None, repeats: int = 3) -> dict:
+    """Wall-time the hot-loop primitives on the plan's local shapes.
+
+    Returns microsecond floats keyed panel_us / trsm_us / schur_us /
+    gather_us / gather_dense_us / fused_us, plus the shapes profiled.
+    """
+    from repro.kernels.backend import get_backend
+
+    bk = get_backend(config.backend)
+    dtype = np.dtype(config.dtype)
+    if grid is not None:
+        v = grid.v
+        R = (N // v // grid.Px) * v
+        C = (N // v // grid.Py) * v
+        nb = N // v
+        # mid-schedule window: the bucket an average step lands in
+        cap = min(b for b in window_buckets(nb) if b >= nb - nb // 2)
+        wr = min(-(-cap // grid.Px), R // v) * v
+        wc = min(-(-cap // grid.Py), C // v) * v
+    else:
+        v = config.v or 32
+        R = C = N
+        wr, wc = R, C
+    rng = np.random.default_rng(0)
+
+    def arr(*shape):
+        return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+    panel = arr(R, v)
+    weights = jnp.ones((R,), dtype)
+    tri = jnp.tril(arr(v, v), -1) + 2.0 * jnp.eye(v, dtype=dtype)
+    A = arr(wr, wc)
+    L10 = arr(wr, v)
+    R01 = arr(v, wc)
+    Afull = arr(R, C)
+    lr = jnp.arange(v, dtype=jnp.int32) * max(R // v, 1)
+    own = jnp.ones((v,), dtype)
+    S = jax.nn.one_hot(lr, R, dtype=dtype)  # [v, R] — the replaced one-hot
+
+    spd_kind = config.pivot == "none"
+    if spd_kind:
+        spd = tri @ tri.T + jnp.eye(v, dtype=dtype)
+        panel_fn, panel_args = jax.jit(lambda a: bk.panel_chol(a)), (spd,)
+        # step 4's solve: L10 = panel (L00^T)^-1
+        trsm_fn, trsm_args = (
+            jax.jit(lambda p, l: bk.trsm_right_upper(p, l.T)), (panel, tri),
+        )
+        # diagonal-block rows live contiguously: masked dynamic_slice
+        gather_fn, gather_args = (
+            jax.jit(lambda a, i, o: jax.lax.dynamic_slice_in_dim(a, i, v) * o),
+            (Afull, jnp.int32(R - v), own[0]),
+        )
+        unit = False
+    else:
+        panel_fn, panel_args = (
+            jax.jit(lambda p, w: bk.panel_lup(p, w, v)), (panel, weights),
+        )
+        trsm_fn, trsm_args = (
+            jax.jit(lambda l, b: bk.trsm_left_lower(l, b, unit=True)), (tri, R01),
+        )
+        gather_fn, gather_args = (
+            jax.jit(lambda a, i, o: jnp.take(a, i, axis=0) * o[:, None]),
+            (Afull, lr, own),
+        )
+        unit = True
+
+    timings = {
+        "panel_us": _best_of(panel_fn, *panel_args, repeats=repeats),
+        "trsm_us": _best_of(trsm_fn, *trsm_args, repeats=repeats),
+        "schur_us": _best_of(
+            jax.jit(lambda a, l, u: bk.schur_update(a, l, u)), A, L10, R01,
+            repeats=repeats,
+        ),
+        "fused_us": _best_of(
+            jax.jit(lambda a, l00, r01, l10:
+                    bk.fused_trsm_schur(a, l00, r01, l10, unit=unit)),
+            A, tri, R01, L10, repeats=repeats,
+        ),
+        "gather_us": _best_of(gather_fn, *gather_args, repeats=repeats),
+        "gather_dense_us": _best_of(
+            jax.jit(lambda s, a: s @ a), S, Afull, repeats=repeats,
+        ),
+    }
+    timings["shapes"] = {"R": R, "C": C, "v": v, "wr": wr, "wc": wc}
+    return timings

@@ -50,6 +50,7 @@ class FactorizationPlan:
         self.mesh = mesh
         self.comm = dict(comm or {})
         self.kind = kind  # "lu" or "cholesky" — flows into the Factorization
+        self.hotloop: dict = {}  # per-primitive timings; see profile_hotloop
         self.trace_count = 0
         self.execute_count = 0
         self._run = run  # (A: np.ndarray [N, N]) -> (F, rows); set by the builder
@@ -57,6 +58,21 @@ class FactorizationPlan:
     def _note_trace(self):
         """Called from inside the traced program: fires once per compile."""
         self.trace_count += 1
+
+    def profile_hotloop(self, repeats: int = 3) -> dict:
+        """Measure per-primitive hot-loop wall times on this plan's shapes.
+
+        Times the backend's panel / TRSM / Schur / gather / fused primitives
+        standalone (see `repro.api.hotloop`) and caches the result on the
+        plan; every later `execute` carries it into
+        `Factorization.hotloop` / `comm_report()`.
+        """
+        from repro.api.hotloop import profile_primitives
+
+        self.hotloop = profile_primitives(
+            self.N, self.config, grid=self.grid, repeats=repeats
+        )
+        return self.hotloop
 
     def execute(self, A) -> Factorization:
         """Factorize A [N, N] with the compiled program (no re-trace)."""
@@ -81,7 +97,7 @@ class FactorizationPlan:
         return Factorization(
             F=F, rows=rows, grid=self.grid, comm=dict(self.comm),
             strategy=self.config.strategy, backend=self.config.backend,
-            kind=self.kind,
+            kind=self.kind, hotloop=dict(self.hotloop),
         )
 
     def __repr__(self):

@@ -64,6 +64,9 @@ class Factorization:
     strategy: str = ""
     backend: str = ""  # KernelBackend that ran the local compute ("ref"/"pallas")
     kind: str = "lu"  # "lu" (F = packed masked LU) or "cholesky" (F = lower L)
+    # per-primitive hot-loop wall times (us), populated when the plan was
+    # profiled via FactorizationPlan.profile_hotloop()
+    hotloop: dict = field(default_factory=dict)
 
     @property
     def N(self) -> int:
@@ -136,9 +139,15 @@ class Factorization:
         head = (f"strategy={self.strategy or '?'} backend={self.backend or '?'} "
                 f"kind={self.kind} grid={self.grid} N={self.N}")
         if not self.comm:
-            return f"{head}\n  single-device: no inter-processor communication"
-        lines = [head]
-        for k, val in self.comm.items():
-            if isinstance(val, (int, float)):
-                lines.append(f"  {k:20s} {val:14,.0f}")
+            lines = [f"{head}\n  single-device: no inter-processor communication"]
+        else:
+            lines = [head]
+            for k, val in self.comm.items():
+                if isinstance(val, (int, float)):
+                    lines.append(f"  {k:20s} {val:14,.0f}")
+        if self.hotloop:
+            lines.append("  hot-loop primitives (us, profiled local shapes):")
+            for k, val in self.hotloop.items():
+                if isinstance(val, (int, float)):
+                    lines.append(f"    {k:18s} {val:12,.1f}")
         return "\n".join(lines)

@@ -127,7 +127,8 @@ def _build_shardmap_plan(N: int, config: SolverConfig, mesh=None) -> Factorizati
 
     def _traced(blocks):
         p._note_trace()
-        return _local_lu(grid, config.pivot, config.backend, blocks)
+        return _local_lu(grid, config.pivot, config.backend, blocks,
+                         hotloop=config.hotloop)
 
     fn = jax.jit(
         _shard_map(
@@ -261,7 +262,7 @@ def build_cholesky25d(N: int, config: SolverConfig, mesh=None) -> FactorizationP
 
     def _traced(blocks):
         p._note_trace()
-        return _local_chol(grid, config.backend, blocks)
+        return _local_chol(grid, config.backend, blocks, hotloop=config.hotloop)
 
     fn = jax.jit(
         _shard_map(

@@ -33,15 +33,21 @@ import jax.numpy as jnp
 
 from repro.core.lu.cost_models import chol_model
 from repro.core.lu.grid import GridConfig
+from repro.core.windows import window_bucket_index, window_buckets
 from repro.kernels.backend import get_backend
 
 
-def _local_chol(cfg: GridConfig, backend: str, Aloc):
+def _local_chol(cfg: GridConfig, backend: str, Aloc, *, hotloop: str = "windowed"):
     """Local program for device (px, py, pz).  Aloc: [1, 1, R, C] local block.
 
     Returns the local block of the lower Cholesky factor L (A = L L^T).
     backend: registered KernelBackend name supplying panel_chol /
-    trsm_right_upper / trsm_left_lower / schur_update.
+    trsm_right_upper / trsm_left_lower / schur_update / fused_trsm_schur.
+    hotloop: "windowed" (the default — SPD retires rows in gid order, so
+    both the row *and* column dimensions shrink with t; diagonal-block
+    movement is indexed instead of one-hot matmuls, and steps 5+6 run
+    through the fused TRSM->Schur primitive) or "flat" (the historical
+    full-block body, kept as the bit-parity oracle and benchmark baseline).
     """
     bk = get_backend(backend)
     Px, Py, c, v, N = cfg.Px, cfg.Py, cfg.c, cfg.v, cfg.N
@@ -63,7 +69,7 @@ def _local_chol(cfg: GridConfig, backend: str, Aloc):
     Aloc = jnp.where(pz == 0, Aloc, jnp.zeros_like(Aloc))
     Floc = jnp.zeros_like(Aloc)
 
-    def step(t, carry):
+    def step_flat(t, carry):
         Aloc, Floc = carry
         lc0 = (t // Py) * v  # local tile-column index of the panel (owner py)
         is_owner_col = py == (t % Py)
@@ -107,6 +113,92 @@ def _local_chol(cfg: GridConfig, backend: str, Aloc):
             Floc,
         )
         return (Aloc, Floc)
+
+    # -- Windowed stepping: SPD has no pivoting, so rows retire in gid order
+    # and *both* local dimensions shrink — each bucketed body works on the
+    # static trailing window Aloc[R - wr:, C - wc:].  The diagonal block
+    # lives contiguously at local row (t//Px)*v on px == t%Px, so its
+    # gather/scatter is a masked dynamic_slice instead of the dense one-hot
+    # S.T@panel / S.T@Aloc / S@L00 matmuls, and steps 5+6 run fused.
+    def make_windowed_step(rem_cap: int):
+        WR = min(-(-rem_cap // Px), R // v)  # worst-case trailing tiles per px
+        WC = min(-(-rem_cap // Py), C // v)
+        wr, wc = WR * v, WC * v
+        r_start, c_start = R - wr, C - wc
+
+        def body(args):
+            t, Aloc, Floc = args
+            Awin = Aloc[r_start:, c_start:]
+            rg = row_gid[r_start:]
+            cg = col_gid[c_start:]
+            lc0 = (t // Py) * v
+            lc0w = jnp.clip(lc0 - c_start, 0, wc - v)  # owner never clips
+            is_owner_col = py == (t % Py)
+            ow = is_owner_col.astype(dtype)
+
+            # -- 1. Reduce the panel block-column over pz (window rows). ------
+            my_panel = jax.lax.dynamic_slice(Awin, (0, lc0w), (wr, v))
+            panel = jax.lax.psum(my_panel, "pz")
+
+            # -- 2. Diagonal block by index: contiguous rows on px == t%Px. ---
+            own_diag = px == (t % Px)
+            odf = own_diag.astype(dtype)
+            lr0w = jnp.clip((t // Px) * v - r_start, 0, wr - v)  # owner exact
+            A00 = jax.lax.psum(
+                jax.lax.dynamic_slice(panel, (lr0w, 0), (v, v)) * (odf * ow),
+                ("px", "py"),
+            )
+
+            # -- 3. Factorize the diagonal block (replicated local compute). --
+            L00 = bk.panel_chol(A00)
+
+            # -- 4. L10 on the owner column, broadcast along py. --------------
+            below = (rg >= (t + 1) * v).astype(dtype)  # [wr]
+            L10_own = bk.trsm_right_upper(panel * below[:, None], L00.T)
+            L10 = jax.lax.psum(L10_own * ow, "py")  # [wr, v]
+
+            # -- 5. Diagonal block-row by index over (px, pz). ----------------
+            R01 = jax.lax.psum(
+                jax.lax.dynamic_slice(Awin, (lr0w, 0), (v, wc)) * odf,
+                ("px", "pz"),
+            )  # [v, wc] current values
+            trailing = (cg >= (t + 1) * v).astype(dtype)
+            R01 = R01 * trailing[None, :]  # columnwise: same U01 as masking after
+
+            # -- 6. Fused TRSM -> Schur on layer t % c (U01 = L10^T stays -----
+            #    VMEM-resident between the solve and the update).
+            on_layer = (pz == (t % c)).astype(dtype)
+            Awin, _ = bk.fused_trsm_schur(
+                Awin, L00, R01, L10 * (on_layer * below)[:, None], unit=False
+            )
+
+            # -- 7. Write the factor panel: L10 below the diagonal, L00 on it.
+            base = L10 * below[:, None]
+            diag_plus = jax.lax.dynamic_slice(base, (lr0w, 0), (v, v)) + L00
+            Fpanel = jnp.where(
+                own_diag,
+                jax.lax.dynamic_update_slice(base, diag_plus, (lr0w, 0)),
+                base,
+            )
+            lc0c = jnp.clip(lc0, 0, C - v)
+            prev = jax.lax.dynamic_slice(Floc, (r_start, lc0c), (wr, v))
+            cgs = jax.lax.dynamic_slice(col_gid, (lc0c,), (v,))
+            is_panel = (cgs >= t * v) & (cgs < (t + 1) * v)  # all-false off-owner
+            Floc = jax.lax.dynamic_update_slice(
+                Floc, jnp.where(is_panel[None, :], Fpanel, prev), (r_start, lc0c)
+            )
+            Aloc = jax.lax.dynamic_update_slice(Aloc, Awin, (r_start, c_start))
+            return (Aloc, Floc)
+
+        return body
+
+    if hotloop == "windowed":
+        bodies = [make_windowed_step(cap) for cap in window_buckets(nsteps)]
+
+        def step(t, carry):
+            return jax.lax.switch(window_bucket_index(t, nsteps), bodies, (t, *carry))
+    else:
+        step = step_flat
 
     _, Floc = jax.lax.fori_loop(0, nsteps, step, (Aloc, Floc))
     return Floc[None, None]

@@ -43,6 +43,7 @@ import numpy as np
 from repro.api.result import Factorization
 from repro.core.lu.cost_models import conflux_model
 from repro.core.lu.grid import GridConfig
+from repro.core.windows import window_bucket_index, window_buckets
 from repro.kernels.backend import get_backend
 
 # Deprecated alias: `Factorization` (repro.api.result) subsumes the old
@@ -110,13 +111,18 @@ def _block_cyclic_gather_loop(blocks: np.ndarray, N: int, v: int) -> np.ndarray:
 # The distributed factorization (shard_map body).
 # ---------------------------------------------------------------------------
 
-def _local_lu(cfg: GridConfig, pivot: str, backend: str, Aloc):
+def _local_lu(cfg: GridConfig, pivot: str, backend: str, Aloc, *,
+              hotloop: str = "windowed"):
     """Local program for device (px, py, pz).  Aloc: [1, 1, R, C] local block.
 
     pivot: "tournament" (COnfLUX, butterfly merge along px) or "partial"
     (ScaLAPACK-style column-by-column global argmax — the 2D baseline).
     backend: registered KernelBackend name ("ref" / "pallas") supplying the
-    local compute primitives (panel LUP, TRSMs, Schur update)."""
+    local compute primitives (panel LUP, TRSMs, Schur update).
+    hotloop: "windowed" (shrinking trailing-column windows, indexed pivot-row
+    gathers, fused TRSM->Schur — the default) or "flat" (the historical
+    full-block step body, kept as the bit-parity oracle for the windowed
+    path and for A/B wall-time rows in the benchmarks)."""
     bk = get_backend(backend)
     Px, Py, c, v, N = cfg.Px, cfg.Py, cfg.c, cfg.v, cfg.N
     px = jax.lax.axis_index("px")
@@ -188,25 +194,30 @@ def _local_lu(cfg: GridConfig, pivot: str, backend: str, Aloc):
         _, _, A00, gids = jax.lax.fori_loop(0, v, col_round, init)
         return A00, gids
 
-    def step(t, carry):
-        Aloc, Floc, active, rows = carry
-        lc0 = (t // Py) * v  # local tile-column index of the panel (owner py)
+    def pivot_panel(t, panel, active):
+        """Steps 2+3: pivot along px, broadcast A00 + ids from the owner
+        column — shared verbatim by the flat and windowed step bodies (the
+        windowed path must keep the pivot order bit-identical)."""
         is_owner_col = py == (t % Py)
         ow = is_owner_col.astype(dtype)
+        if pivot == "tournament":
+            A00, piv_gids = tournament(panel, active)
+        else:
+            A00, piv_gids = partial_pivot(panel, active)
+        A00 = jax.lax.psum(A00 * ow, "py")
+        piv_gids = jax.lax.psum(jnp.where(is_owner_col, piv_gids, 0), "py")
+        return A00, piv_gids, ow
+
+    def step_flat(t, carry):
+        Aloc, Floc, active, rows = carry
+        lc0 = (t // Py) * v  # local tile-column index of the panel (owner py)
 
         # -- 1. Reduce the panel block-column over pz. ------------------------
         my_panel = jax.lax.dynamic_slice(Aloc, (0, lc0), (R, v))
         panel = jax.lax.psum(my_panel, "pz")  # base + all pending partials
 
-        # -- 2. Pivoting along px (meaningful on the owner column). ----------
-        if pivot == "tournament":
-            A00, piv_gids = tournament(panel, active)
-        else:
-            A00, piv_gids = partial_pivot(panel, active)
-
-        # -- 3. Broadcast A00 + pivot ids from the owner column to all py. ----
-        A00 = jax.lax.psum(A00 * ow, "py")
-        piv_gids = jax.lax.psum(jnp.where(is_owner_col, piv_gids, 0), "py")
+        # -- 2+3. Pivoting along px; broadcast A00 + ids to all py. ----------
+        A00, piv_gids, ow = pivot_panel(t, panel, active)
 
         L00 = jnp.tril(A00, -1) + jnp.eye(v, dtype=dtype)
         U00 = jnp.triu(A00)
@@ -246,6 +257,96 @@ def _local_lu(cfg: GridConfig, pivot: str, backend: str, Aloc):
 
         rows = jax.lax.dynamic_update_slice(rows, piv_gids, (t * v,))
         return (Aloc, Floc, new_active, rows)
+
+    # -- Windowed stepping (paper Lemma 10): at step t only columns with ------
+    # gid >= t*v are read or written, and those are a *suffix* of the local
+    # columns (tile-cyclic ownership is monotone in the local tile index), so
+    # each bucketed body works on the static window Aloc[:, C - wc:].  Rows
+    # cannot be windowed under pivoting — active rows stay scattered over the
+    # whole local block (§7.3 row masking) — so the row dimension stays R.
+    # Pivot-row movement is indexed (take / scatter-add on local row ids)
+    # instead of the dense one-hot matmuls S.T@Aloc / S@A00 / S@U01, which
+    # drops the O(v*R*C)-per-step gather cost the schedule never required.
+    def pivot_local_rows(piv_gids):
+        """Local row index + ownership mask of each pivot gid on this px."""
+        tile = piv_gids // v
+        lr = jnp.clip((tile // Px) * v + piv_gids % v, 0, R - 1)
+        own = (tile % Px == px) & (piv_gids >= 0)
+        return lr, own.astype(dtype)
+
+    def make_windowed_step(rem_cap: int):
+        WC = min(-(-rem_cap // Py), C // v)  # worst-case trailing tiles per py
+        wc = WC * v
+        c_start = C - wc
+
+        def body(args):
+            t, Aloc, Floc, active, rows = args
+            Awin = Aloc[:, c_start:]
+            cg = col_gid[c_start:]
+            lc0 = (t // Py) * v
+            lc0w = jnp.clip(lc0 - c_start, 0, wc - v)  # owner never clips
+
+            # -- 1. Reduce the panel block-column over pz (window slice). -----
+            my_panel = jax.lax.dynamic_slice(Awin, (0, lc0w), (R, v))
+            panel = jax.lax.psum(my_panel, "pz")
+
+            # -- 2+3. Pivoting + broadcast (identical to the flat body). ------
+            A00, piv_gids, ow = pivot_panel(t, panel, active)
+
+            L00 = jnp.tril(A00, -1) + jnp.eye(v, dtype=dtype)
+            U00 = jnp.triu(A00)
+            lr, own = pivot_local_rows(piv_gids)
+            is_new_piv = jnp.zeros((R,), dtype).at[lr].add(own)
+            new_active = active * (1.0 - is_new_piv)
+
+            # -- 4. L10 on the owner column, broadcast along py. --------------
+            L10_own = bk.trsm_right_upper(panel * new_active[:, None], U00)
+            L10 = jax.lax.psum(L10_own * ow, "py")  # [R, v]
+
+            # -- 5. Pivot rows gathered by index over (px, pz). ---------------
+            R01 = jax.lax.psum(
+                jnp.take(Awin, lr, axis=0) * own[:, None], ("px", "pz")
+            )  # [v, wc] current values
+            trailing = (cg >= (t + 1) * v).astype(dtype)
+            R01 = R01 * trailing[None, :]  # columnwise: same U01 as masking after
+
+            # -- 6. Fused TRSM -> Schur on layer t % c: U01 never leaves the --
+            #    kernel between the solve and the trailing update.
+            on_layer = (pz == (t % c)).astype(dtype)
+            Awin, U01 = bk.fused_trsm_schur(
+                Awin, L00, R01, L10 * (on_layer * new_active)[:, None], unit=True
+            )
+
+            # -- 7. Factor write-back: one v-wide panel slab + an indexed -----
+            #    row scatter for the pivot rows' trailing columns — never a
+            #    full-block (or full-window) copy of Floc.
+            lc0c = jnp.clip(lc0, 0, C - v)
+            prev = jax.lax.dynamic_slice(Floc, (0, lc0c), (R, v))
+            was_piv = (1.0 - active)[:, None]
+            SA00 = jnp.zeros((R, v), dtype).at[lr].add(A00 * own[:, None])
+            Fpanel = L10 * new_active[:, None] + SA00 + prev * was_piv
+            cgs = jax.lax.dynamic_slice(col_gid, (lc0c,), (v,))
+            is_panel = (cgs >= t * v) & (cgs < (t + 1) * v)  # all-false off-owner
+            Floc = jax.lax.dynamic_update_slice(
+                Floc, jnp.where(is_panel[None, :], Fpanel, prev), (0, lc0c)
+            )
+            Floc = Floc.at[lr, c_start:].add(U01 * own[:, None])
+
+            Aloc = jax.lax.dynamic_update_slice(Aloc, Awin, (0, c_start))
+            rows = jax.lax.dynamic_update_slice(rows, piv_gids, (t * v,))
+            return (Aloc, Floc, new_active, rows)
+
+        return body
+
+    if hotloop == "windowed":
+        bodies = [make_windowed_step(cap) for cap in window_buckets(nsteps)]
+
+        def step(t, carry):
+            return jax.lax.switch(
+                window_bucket_index(t, nsteps), bodies, (t, *carry)
+            )
+    else:
+        step = step_flat
 
     active0 = jnp.ones(R, dtype)
     rows0 = jnp.zeros(N, jnp.int32)

@@ -91,8 +91,9 @@ def lu_masked_sequential(A: jax.Array, v: int = 32, backend: str = "ref"):
         U00_packed = piv_onehot @ Fp  # [v, v] packed LU of the pivot block
         L00 = jnp.tril(U00_packed, -1) + jnp.eye(v, dtype=F.dtype)
         R01 = (piv_onehot @ F) * colmask[None, :]  # pivot rows, trailing cols
-        U01 = bk.trsm_left_lower(L00, R01, unit=True)
-        F = bk.schur_update(F, L10 * active[:, None], U01 * colmask[None, :])
+        # Steps 5+6 fused: U01 = L00^-1 R01 and the trailing update in one
+        # backend call (R01 is pre-masked, so U01 comes out masked columnwise).
+        F, U01 = bk.fused_trsm_schur(F, L00, R01, L10 * active[:, None], unit=True)
         # Write U01 into the pivot rows' trailing columns.
         F = F * (1.0 - piv_onehot.sum(0)[:, None] * colmask[None, :]) + piv_onehot.T @ (
             U01 * colmask[None, :]

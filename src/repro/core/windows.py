@@ -1,0 +1,32 @@
+"""Shrinking trailing-window bucketing shared by the 2.5D hot loops.
+
+At step t of an N/v-step right-looking factorization only the trailing
+(N - t*v) x (N - t*v) submatrix is touched (paper Lemma 10), and under the
+v x v tile-cyclic layout the local rows/columns belonging to that window
+form a *suffix* of the local block (tile ownership is monotone in the local
+tile index).  Rounding the remaining tile count up to the next power of two
+gives a small set of static window shapes — one traced step body per bucket,
+selected at run time by `lax.switch` — so the whole loop still jits once
+while the local compute and HBM traffic shrink with t.
+
+The bucket index is a function of the step counter alone (never of the
+device coordinates), so every device of a shard_map mesh takes the same
+branch and the collectives inside a branch stay uniform across the mesh —
+the property that keeps XLA:CPU's rendezvous (and a TPU deployment's
+channel matching) deadlock-free.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def window_buckets(nb: int) -> list[int]:
+    """Power-of-two bucket caps covering every remaining-tile count 1..nb."""
+    return [1 << k for k in range(max((nb - 1).bit_length() + 1, 1))]
+
+
+def window_bucket_index(t, nb: int):
+    """Traced branch index for step t: smallest k with nb - t <= 2^k."""
+    caps = jnp.asarray(window_buckets(nb), jnp.int32)
+    return jnp.sum(jnp.asarray(nb - t, jnp.int32) > caps)

@@ -2,8 +2,11 @@
 
 Each kernel module exposes a pallas_call implementation with explicit
 BlockSpec VMEM tiling; ops.py holds the jit'd public wrappers (interpret
-mode on CPU, compiled on TPU); ref.py holds the pure-jnp oracles used by
-the allclose sweeps in tests/test_kernels.py; backend.py is the dispatch
-layer (the `KernelBackend` protocol + "ref"/"pallas" registrations) the
-factorization strategies route their local compute through.
+mode on CPU, compiled on TPU) with block sizes auto-fit to the operand
+shapes; ref.py holds the pure-jnp oracles used by the allclose sweeps in
+tests/test_kernels.py; backend.py is the dispatch layer (the
+`KernelBackend` protocol + "ref"/"pallas" registrations) the factorization
+strategies route their local compute through.  fused_schur.py is the
+TRSM->Schur megakernel the windowed hot loop feeds steps 5+6 through —
+U01 stays VMEM-resident between the solve and the trailing update.
 """

@@ -66,6 +66,17 @@ class KernelBackend(Protocol):
         """A - L @ U.  A [M, N], L [M, K], U [K, N] (rank-v update, step 6)."""
         ...
 
+    def fused_trsm_schur(self, A: jax.Array, L00: jax.Array, R01: jax.Array,
+                         L10: jax.Array, *, unit: bool = True):
+        """Steps 5+6 fused: U01 = L00^-1 R01, then A - L10 @ U01.
+
+        Returns (A_new, U01).  The fused form keeps U01 resident between the
+        triangular solve and the trailing update (no HBM round-trip); the
+        forward substitution is columnwise independent, so the result is
+        bit-compatible with the trsm_left_lower -> schur_update composition.
+        """
+        ...
+
 
 _BACKENDS: dict[str, KernelBackend] = {}
 
@@ -107,14 +118,6 @@ def pallas_constraint_violation(dtype, v: int | None) -> str | None:
     return None
 
 
-def _tile(n: int, cap: int) -> int:
-    """Largest block size <= cap that divides n (grid tiling needs exact cover)."""
-    for d in range(min(cap, n), 0, -1):
-        if n % d == 0:
-            return d
-    return 1
-
-
 class RefBackend:
     """Pure-jnp primitives — the numerics the strategies inlined before the
     dispatch layer existed, bit-for-bit: native-dtype solves and matmuls."""
@@ -136,11 +139,16 @@ class RefBackend:
     def schur_update(self, A, L, U):
         return A - L @ U
 
+    def fused_trsm_schur(self, A, L00, R01, L10, *, unit=True):
+        U01 = self.trsm_left_lower(L00, R01, unit=unit)
+        return A - L10 @ U01, U01
+
 
 class PallasBackend:
-    """The MXU-tiled Pallas kernels (`repro.kernels.ops`), with block sizes
-    auto-fit to the local shapes: the largest divisor of each dimension not
-    exceeding the 128x128 MXU tile (256 for the long TRSM dimension)."""
+    """The MXU-tiled Pallas kernels (`repro.kernels.ops`); the ops wrappers
+    auto-fit block sizes to the local shapes (largest divisor of each
+    dimension not exceeding the 128x128 MXU tile, 256 for the long TRSM
+    dimension)."""
 
     name = "pallas"
 
@@ -158,21 +166,22 @@ class PallasBackend:
     def trsm_right_upper(self, B, U):
         from repro.kernels import ops
 
-        return ops.trsm_right_upper(B, U, br=_tile(B.shape[0], 256))
+        return ops.trsm_right_upper(B, U)
 
     def trsm_left_lower(self, L, B, *, unit=True):
         from repro.kernels import ops
 
-        return ops.trsm_left_lower(L, B, bc=_tile(B.shape[1], 256), unit=unit)
+        return ops.trsm_left_lower(L, B, unit=unit)
 
     def schur_update(self, A, L, U):
         from repro.kernels import ops
 
-        M, N = A.shape
-        K = L.shape[1]
-        return ops.schur_update(
-            A, L, U, bm=_tile(M, 128), bn=_tile(N, 128), bk=_tile(K, 128)
-        )
+        return ops.schur_update(A, L, U)
+
+    def fused_trsm_schur(self, A, L00, R01, L10, *, unit=True):
+        from repro.kernels import ops
+
+        return ops.fused_trsm_schur(A, L00, R01, L10, unit=unit)
 
 
 register_backend("ref", RefBackend())

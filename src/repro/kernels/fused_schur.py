@@ -1,0 +1,90 @@
+"""Fused TRSM -> Schur megakernel:  U01 = L00^-1 R01,  A -= L10 @ U01.
+
+COnfLUX steps 5+6 executed back-to-back keep U01 resident: the unfused path
+materializes U01 to HBM after the triangular solve and immediately re-reads
+it as the GEMM operand of the rank-v trailing update — one full [v, C]
+round-trip per step that the schedule never requires.  Here one pallas_call
+covers both: the grid walks column tiles in the outer dimension and row
+tiles in the inner one, the forward substitution for a column tile runs
+exactly once (first row step) into a VMEM scratch accumulator, and every
+row step consumes that resident tile straight on the MXU.  Pallas's
+pipelined BlockSpec staging double-buffers the A/L10 tiles in VMEM around
+the compute, so the only HBM traffic is the tiles the update itself owns.
+
+The substitution body is the same fp32 forward solve as `trsm.py` (column
+independence makes the fused result bit-compatible with the two-call
+composition), and the update is the same fp32-accumulated `A - L @ U` as
+`schur_update.py` with the whole v-contraction in one block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, l00_ref, r01_ref, l10_ref, o_ref, u_ref, u_acc, *,
+            v: int, unit: bool):
+    i = pl.program_id(1)  # row tile — the fast dimension; column tile is slow
+
+    @pl.when(i == 0)
+    def _solve():
+        # Forward substitution L00 @ U = R01 for this column tile, once per
+        # column tile; U stays resident in VMEM for every row step below.
+        L = l00_ref[...].astype(jnp.float32)
+        B = r01_ref[...].astype(jnp.float32)
+
+        def body(r, X):
+            partial = (L[r, :] * (jax.lax.broadcasted_iota(jnp.int32, (v,), 0) < r)) @ X
+            xr = B[r, :] - partial
+            if not unit:
+                xr = xr / L[r, r]
+            return X.at[r, :].set(xr)
+
+        X = jax.lax.fori_loop(0, v, body, jnp.zeros_like(B))
+        u_acc[...] = X
+        u_ref[...] = X.astype(u_ref.dtype)
+
+    o_ref[...] = (
+        a_ref[...].astype(jnp.float32)
+        - jnp.dot(l10_ref[...].astype(jnp.float32), u_acc[...],
+                  preferred_element_type=jnp.float32)
+    ).astype(o_ref.dtype)
+
+
+def fused_trsm_schur(A, L00, R01, L10, *, bm: int = 128, bc: int = 128,
+                     unit: bool = True, interpret: bool = False):
+    """(A - L10 @ L00^-1 R01, L00^-1 R01) in one grid.
+
+    A [M, C], L00 [v, v] (unit-)lower, R01 [v, C], L10 [M, v].
+    Returns (A_new [M, C], U01 [v, C]).
+    """
+    M, C = A.shape
+    v = L00.shape[0]
+    bm, bc = min(bm, M), min(bc, C)
+    assert M % bm == 0 and C % bc == 0
+    grid = (C // bc, M // bm)  # column tiles outer, row tiles inner
+    return pl.pallas_call(
+        functools.partial(_kernel, v=v, unit=unit),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bc), lambda j, i: (i, j), memory_space=pltpu.VMEM),
+            pl.BlockSpec((v, v), lambda j, i: (0, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((v, bc), lambda j, i: (0, j), memory_space=pltpu.VMEM),
+            pl.BlockSpec((bm, v), lambda j, i: (i, 0), memory_space=pltpu.VMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bc), lambda j, i: (i, j), memory_space=pltpu.VMEM),
+            pl.BlockSpec((v, bc), lambda j, i: (0, j), memory_space=pltpu.VMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, C), A.dtype),
+            jax.ShapeDtypeStruct((v, C), R01.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((v, bc), jnp.float32)],
+        interpret=interpret,
+    )(A, L00, R01, L10)

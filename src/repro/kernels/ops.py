@@ -3,6 +3,12 @@
 On CPU (this container) the kernels execute in interpret mode — the kernel
 body runs in Python for correctness validation; on TPU they compile to
 Mosaic.  `interpret=None` auto-detects.
+
+Block sizes are auto-fit before jit: each requested tile (`bm`/`bn`/`bk`/
+`br`/`bc`) is shrunk to the largest divisor of its array dimension that does
+not exceed it, so a direct `ops.schur_update` / `ops.trsm_*` call on a
+matrix smaller (or merely not a multiple) of the 128/256 defaults works
+instead of tripping the kernels' exact-cover assertions.
 """
 
 from __future__ import annotations
@@ -13,6 +19,7 @@ import jax
 
 from repro.kernels import chol_panel as _cp
 from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_schur as _fs
 from repro.kernels import lu_panel as _lp
 from repro.kernels import mamba_scan as _ms
 from repro.kernels import schur_update as _su
@@ -25,9 +32,24 @@ def _interp(flag):
     return jax.default_backend() != "tpu"
 
 
+def _fit(block: int, dim: int) -> int:
+    """Largest tile <= min(block, dim) dividing dim (grids need exact cover)."""
+    for d in range(min(block, dim), 0, -1):
+        if dim % d == 0:
+            return d
+    return 1
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _schur_update(A, L, U, bm, bn, bk, interpret):
+    return _su.schur_update(A, L, U, bm=bm, bn=bn, bk=bk, interpret=interpret)
+
+
 def schur_update(A, L, U, bm=128, bn=128, bk=128, interpret=None):
-    return _su.schur_update(A, L, U, bm=bm, bn=bn, bk=bk, interpret=_interp(interpret))
+    M, N = A.shape
+    K = L.shape[1]
+    return _schur_update(A, L, U, _fit(bm, M), _fit(bn, N), _fit(bk, K),
+                         _interp(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -41,13 +63,37 @@ def chol_panel(A, interpret=None):
 
 
 @functools.partial(jax.jit, static_argnames=("br", "interpret"))
+def _trsm_right_upper(B, U, br, interpret):
+    return _tr.trsm_right_upper(B, U, br=br, interpret=interpret)
+
+
 def trsm_right_upper(B, U, br=256, interpret=None):
-    return _tr.trsm_right_upper(B, U, br=br, interpret=_interp(interpret))
+    return _trsm_right_upper(B, U, _fit(br, B.shape[0]), _interp(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("bc", "unit", "interpret"))
+def _trsm_left_lower(L, B, bc, unit, interpret):
+    return _tr.trsm_left_lower(L, B, bc=bc, unit=unit, interpret=interpret)
+
+
 def trsm_left_lower(L, B, bc=256, unit=True, interpret=None):
-    return _tr.trsm_left_lower(L, B, bc=bc, unit=unit, interpret=_interp(interpret))
+    return _trsm_left_lower(L, B, _fit(bc, B.shape[1]), unit, _interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bc", "unit", "interpret"))
+def _fused_trsm_schur(A, L00, R01, L10, bm, bc, unit, interpret):
+    return _fs.fused_trsm_schur(A, L00, R01, L10, bm=bm, bc=bc, unit=unit,
+                                interpret=interpret)
+
+
+def fused_trsm_schur(A, L00, R01, L10, bm=128, bc=128, unit=True, interpret=None):
+    """U01 = L00^-1 R01 and A - L10 @ U01 in one VMEM-resident grid.
+
+    Returns (A_new, U01) — see `repro.kernels.fused_schur`.
+    """
+    M, C = A.shape
+    return _fused_trsm_schur(A, L00, R01, L10, _fit(bm, M), _fit(bc, C), unit,
+                             _interp(interpret))
 
 
 @functools.partial(

@@ -37,6 +37,11 @@ def trsm_left_lower(L, B, unit=True):
     return X.astype(B.dtype)
 
 
+def fused_trsm_schur(A, L00, R01, L10, unit=True):
+    U01 = trsm_left_lower(L00, R01, unit=unit)
+    return schur_update(A, L10, U01), U01
+
+
 def flash_attention(q, k, v, causal=True, window=None, softcap=None):
     """Dense softmax attention (GQA), fp32 internals."""
     B, S, H, hd = q.shape

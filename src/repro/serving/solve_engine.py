@@ -10,6 +10,16 @@ paid once at engine construction and every request runs the compiled plan.
     x = eng.solve(A, b)            # factorize + solve
     x2 = eng.resolve(b2)           # new RHS, reuse the last factorization
     print(eng.stats())
+
+Batched multi-RHS (the first slice of async request batching): `submit`
+queues RHS vectors against the current factorization and `flush` stacks all
+same-shape pending RHS into a single [N, k] jitted solve — one dispatch
+instead of k, which is where serving throughput comes from when many small
+solve requests share one factorized system:
+
+    eng.factor(A)
+    t1, t2 = eng.submit(b1), eng.submit(b2)
+    xs = eng.flush()               # one [N, 2] solve; xs[t1], xs[t2]
 """
 
 from __future__ import annotations
@@ -30,8 +40,11 @@ class SolveEngine:
         self.plan = plan(N, self.config)
         self.N = N
         self._last: Factorization | None = None
+        self._pending: list[np.ndarray] = []  # queued RHS awaiting flush()
         self._n_factor = 0
         self._n_solve = 0
+        self._n_batched = 0  # batched solve dispatches (flush groups)
+        self._n_batched_rhs = 0  # RHS vectors that rode a batched dispatch
         self._t_factor = 0.0
         self._t_solve = 0.0
 
@@ -70,6 +83,51 @@ class SolveEngine:
         """[(A, b), ...] -> [x, ...] — a request batch on one plan."""
         return [np.asarray(self.solve(A, b)) for A, b in systems]
 
+    def submit(self, b) -> int:
+        """Queue a single-RHS solve against the current factorization.
+
+        Returns the ticket index into the list `flush()` returns.  The RHS
+        is validated eagerly (shape [N]) so a malformed request fails at
+        submit time, not inside a batch holding other requests hostage.
+        """
+        b = np.asarray(b)
+        if b.shape != (self.N,):
+            raise ValueError(f"submit takes a single [N] RHS with N={self.N}, "
+                             f"got shape {b.shape}")
+        if b.dtype.kind not in "fiub":
+            raise ValueError(
+                f"submit takes a real RHS (factors are real); got dtype "
+                f"{b.dtype.name} — solve b.real and b.imag separately"
+            )
+        self._pending.append(b)
+        return len(self._pending) - 1
+
+    def flush(self):
+        """Solve every pending RHS as one stacked [N, k] dispatch.
+
+        All queued RHS share the engine's N, so one `jnp.stack` -> one jitted
+        triangular-solve pair covers the whole batch; results come back in
+        submit order.  Counts one batched solve (plus k RHS) in `stats()`.
+        """
+        if self._last is None:
+            raise RuntimeError("no factorization yet; call factor() or solve() first")
+        if not self._pending:
+            return []
+        pending = self._pending
+        B = np.stack(pending, axis=1)  # [N, k]
+        t0 = time.perf_counter()
+        # The queue is cleared only after the solve succeeds: a failing batch
+        # (e.g. a numerically broken factorization) leaves every request
+        # queued for a retry instead of silently dropping them.
+        X = jax.block_until_ready(self._last.solve(B))
+        self._pending = []
+        self._t_solve += time.perf_counter() - t0
+        self._n_solve += len(pending)
+        self._n_batched += 1
+        self._n_batched_rhs += len(pending)
+        X = np.asarray(X)
+        return [X[:, j] for j in range(X.shape[1])]
+
     def stats(self) -> dict:
         """Engine counters + the global plan-cache hit/miss trajectory."""
         return {
@@ -79,6 +137,9 @@ class SolveEngine:
             "grid": str(self.plan.grid),
             "factorizations": self._n_factor,
             "solves": self._n_solve,
+            "batched_solves": self._n_batched,
+            "batched_rhs": self._n_batched_rhs,
+            "pending": len(self._pending),
             "trace_count": self.plan.trace_count,
             "factor_s_total": round(self._t_factor, 6),
             "solve_s_total": round(self._t_solve, 6),

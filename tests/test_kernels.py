@@ -104,6 +104,31 @@ class TestTrsm:
         )
 
 
+class TestFusedTrsmSchur:
+    @pytest.mark.parametrize("M,C,v", [(128, 128, 16), (256, 128, 32), (64, 96, 8)])
+    @pytest.mark.parametrize("unit", [True, False])
+    def test_sweep(self, M, C, v, unit):
+        # 0.3x off-diagonal keeps the forward substitution well-conditioned
+        # (growth compounds through the Schur subtract at v=32 otherwise)
+        L00 = 0.3 * jnp.tril(_rand((v, v)), -1) + (1.0 if unit else 2.0) * jnp.eye(v)
+        A, R01, L10 = _rand((M, C)), _rand((v, C)), _rand((M, v))
+        gA, gU = ops.fused_trsm_schur(A, L00, R01, L10, bm=64, bc=64, unit=unit)
+        wA, wU = ref.fused_trsm_schur(A, L00, R01, L10, unit=unit)
+        np.testing.assert_allclose(np.asarray(gU), np.asarray(wU), rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(gA), np.asarray(wA), rtol=2e-4, atol=2e-4)
+
+    def test_fused_equals_two_call_composition(self):
+        v, M, C = 16, 64, 128
+        L00 = jnp.tril(_rand((v, v)), -1) + jnp.eye(v)
+        A, R01, L10 = _rand((M, C)), _rand((v, C)), _rand((M, v))
+        gA, gU = ops.fused_trsm_schur(A, L00, R01, L10)
+        U = ops.trsm_left_lower(L00, R01)
+        np.testing.assert_array_equal(np.asarray(gU), np.asarray(U))
+        np.testing.assert_array_equal(
+            np.asarray(gA), np.asarray(ops.schur_update(A, L10, U))
+        )
+
+
 class TestFlashAttention:
     @pytest.mark.parametrize("B,S,H,KV,hd", [(2, 256, 4, 2, 32), (1, 128, 8, 8, 64),
                                              (2, 128, 4, 1, 16)])
