@@ -13,7 +13,13 @@ the conflux-vs-cholesky comm-volume ratio (~2x fewer elements/proc for the
 symmetric schedule) per PR; on real TPUs the same dispatch compiles to
 Mosaic.
 
-The ``hotloop`` rows (schema v4) A/B the shrinking-window + fused step body
+The ``batched`` rows (schema v5) time the many-small-systems path: one
+``plan((B, N))`` execute over a [B, N, N] stack against the Python loop of
+B single-system executes, interleaved best-of-7, on both backends — the
+``loop_over_batched`` throughput ratio is the acceptance metric (and the
+smoke perf gate compares it against the committed baseline).
+
+The ``hotloop`` rows A/B the shrinking-window + fused step body
 against the flat full-block baseline — full-run wall time for conflux and
 cholesky25d on both backends, plus the per-primitive breakdown (panel /
 trsm / schur / gather, fused vs unfused, indexed vs dense gather) from
@@ -163,6 +169,42 @@ for d in hotloop_rows:
           f"(schur {d['primitives'].get('schur_us', 0):.0f}us, "
           f"fused {d['primitives'].get('fused_us', 0):.0f}us)")
 
+# batched many-small-systems rows (schema v5): ONE plan((B, N)) execute — a
+# single traced program over the [B, N, N] stack — against the Python loop
+# of B single-system executes on the (cached, pre-warmed) single plan.  The
+# interleaved best-of-7 puts the container's slow phases on both sides of
+# the ratio, same reasoning as the hotloop rows above.  The pallas row runs
+# at a smaller B: interpret mode executes grid points in Python, so the
+# batch-grid win there is kernel-launch amortization, not wall time.
+batched_rows = []
+for backend, Bb in (("ref", 128), ("pallas", 8)):
+    Nb, vb = 32, 8
+    Ab = rng.standard_normal((Bb, Nb, Nb)).astype(np.float32)
+    cfgb = SolverConfig(strategy="sequential", backend=backend, v=vb)
+    pb = plan((Bb, Nb), cfgb)
+    ps = plan(Nb, cfgb)
+    pb.execute(Ab)        # warm compile (batched program)
+    ps.execute(Ab[0])     # warm compile (single program, reused by the loop)
+    dts_b, dts_l = [], []
+    for _ in range(7):
+        t0 = time.perf_counter(); pb.execute(Ab)
+        dts_b.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        for i in range(Bb):
+            ps.execute(Ab[i])
+        dts_l.append(time.perf_counter() - t0)
+    batched_us = min(dts_b) * 1e6
+    loop_us = min(dts_l) * 1e6
+    batched_rows.append({
+        "B": Bb, "N": Nb, "backend": backend, "dtype": "float32",
+        "batched_us": batched_us, "loop_us": loop_us,
+        "loop_over_batched": loop_us / max(batched_us, 1e-9),
+    })
+for d in batched_rows:
+    print(f"# batched {d['backend']} B={d['B']} N={d['N']}: "
+          f"loop/batched = {d['loop_over_batched']:.1f}x "
+          f"({d['loop_us']:.0f}us -> {d['batched_us']:.0f}us)")
+
 # conflux-vs-cholesky comm volume at equal (N, grid) — the symmetric schedule
 # should move roughly half the elements per processor (~2x fewer).
 chol_vs_lu = []
@@ -183,6 +225,7 @@ print("BENCH_JSON:" + json.dumps({"measured": records,
                                   "backend_delta": deltas,
                                   "chol_vs_lu": chol_vs_lu,
                                   "hotloop": hotloop_rows,
+                                  "batched": batched_rows,
                                   "plan_cache": plan_cache_stats()}))
 """
 

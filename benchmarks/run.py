@@ -17,9 +17,13 @@ freshly measured hotloop windowed/flat wall-time ratios are compared
 against the *committed* smoke baseline's and the run fails when any row
 regresses past ``SMOKE_GATE_TOLERANCE`` (2x; ratios rather than absolute
 times so the shared CI container's load swings cancel — the in-run flat
-body is the control).  ``--validate`` checks the full-run JSON
-(``--validate --smoke`` the smoke one) against schema v4 and exits non-zero
-on violations — CI runs smoke (with the gate) + validate and uploads the
+body is the control).  The gate also covers the schema-v5 ``batched`` rows
+(batched-vs-Python-loop throughput per backend): those regress when the
+loop/batched ratio *drops* past tolerance.  ``--validate`` checks the
+full-run JSON (``--validate --smoke`` the smoke one) against schema v5 —
+including the acceptance floor that the ref B=128, N=32 batched execute
+beats a Python loop of single executes by >= 3x — and exits non-zero on
+violations; CI runs smoke (with the gate) + validate and uploads the
 artifact.
 """
 
@@ -34,7 +38,7 @@ _ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 BENCH_JSON = os.path.join(_ROOT, "BENCH_lu.json")
 BENCH_SMOKE_JSON = os.path.join(_ROOT, "BENCH_lu.smoke.json")
 
-SCHEMA = "BENCH_lu.v4"
+SCHEMA = "BENCH_lu.v5"
 _MEASURED_KEYS = {
     "strategy", "backend", "N", "grid", "wall_us_per_call", "reconstruction_err",
     "solve_err", "comm_per_proc_elements", "model_per_proc_elements",
@@ -46,6 +50,11 @@ _CHOL_KEYS = {"N", "grid", "lu_per_proc_elements", "chol_per_proc_elements",
 _HOTLOOP_KEYS = {"strategy", "backend", "N", "grid", "windowed_us", "flat_us",
                  "windowed_over_flat", "primitives"}
 _PRIMITIVE_KEYS = {"panel_us", "trsm_us", "schur_us", "gather_us"}
+_BATCHED_KEYS = {"B", "N", "backend", "dtype", "batched_us", "loop_us",
+                 "loop_over_batched"}
+# The batched ref row must beat a Python loop of single-system executes by at
+# least this factor (acceptance floor at B=128, N=32, f32).
+BATCHED_MIN_SPEEDUP = 3.0
 _CACHE_KEYS = {"hits", "misses", "evictions", "size", "capacity"}
 
 # Perf-regression gate: a freshly measured windowed/flat hotloop ratio may
@@ -135,6 +144,32 @@ def validate_bench(path: str = BENCH_JSON, mode: str = "full") -> list[str]:
                 f"hotloop must cover conflux+cholesky25d on both backends, "
                 f"missing {sorted(want - combos)}"
             )
+    batched = bench.get("batched")
+    if measured and not batched:
+        errors.append("missing section: batched (batched-vs-loop throughput rows)")
+    seen_ref_accept = False
+    for i, d in enumerate(batched or []):
+        missing = _BATCHED_KEYS - set(d)
+        if missing:
+            errors.append(f"batched[{i}] missing keys: {sorted(missing)}")
+            continue
+        if d["backend"] == "ref" and d["B"] == 128 and d["N"] == 32:
+            seen_ref_accept = True
+            if not d["loop_over_batched"] >= BATCHED_MIN_SPEEDUP:
+                errors.append(
+                    f"batched[{i}] (ref B=128 N=32): batched execute must beat "
+                    f"the Python loop by >= {BATCHED_MIN_SPEEDUP:.1f}x, got "
+                    f"{d['loop_over_batched']:.2f}x"
+                )
+    if batched:
+        b_backends = {d.get("backend") for d in batched}
+        if not {"ref", "pallas"} <= b_backends:
+            errors.append(
+                f"batched must cover both kernel backends, saw "
+                f"{sorted(map(str, b_backends))}"
+            )
+        if not seen_ref_accept:
+            errors.append("batched must carry the ref B=128 N=32 acceptance row")
     cache = bench.get("plan_cache")
     if not isinstance(cache, dict) or not _CACHE_KEYS <= set(cache):
         errors.append(f"plan_cache must carry {sorted(_CACHE_KEYS)}, got {cache}")
@@ -148,9 +183,13 @@ def smoke_gate(bench: dict, baseline: dict | None,
 
     Keyed by (strategy, backend), comparing the windowed/flat wall-time
     *ratio* (see SMOKE_GATE_TOLERANCE for why ratios: the in-run flat body
-    is the load-invariant control).  A baseline without hotloop rows (older
-    schema) or a missing row gates nothing — callers must report a
-    compared-count of 0 as "gate did not run", never as a pass.
+    is the load-invariant control).  Batched rows gate the same way, keyed
+    by (backend, B, N) on the loop/batched throughput ratio — here a
+    regression is the ratio *dropping* below baseline/tol, i.e. the batched
+    execute losing its edge over the in-run Python loop (again a ratio of
+    two same-process timings, so load swings cancel).  A baseline without
+    comparable rows (older schema) or a missing row gates nothing — callers
+    must report a compared-count of 0 as "gate did not run", never as a pass.
     """
     base = {(d["strategy"], d["backend"]): d
             for d in (baseline or {}).get("hotloop", [])
@@ -166,6 +205,22 @@ def smoke_gate(bench: dict, baseline: dict | None,
                 f"{d['strategy']}/{d['backend']} N={d['N']}: windowed/flat "
                 f"ratio {d['windowed_over_flat']:.2f} vs baseline "
                 f"{ref['windowed_over_flat']:.2f} (> {tol:.1f}x tolerance)"
+            )
+    bbase = {(d["backend"], d["B"], d["N"]): d
+             for d in (baseline or {}).get("batched", [])
+             if isinstance(d, dict) and _BATCHED_KEYS <= set(d)}
+    for d in bench.get("batched", []):
+        if not _BATCHED_KEYS <= set(d):
+            continue
+        ref = bbase.get((d["backend"], d["B"], d["N"]))
+        if ref is None:
+            continue
+        compared += 1
+        if d["loop_over_batched"] < ref["loop_over_batched"] / tol:
+            regressions.append(
+                f"batched {d['backend']} B={d['B']} N={d['N']}: loop/batched "
+                f"ratio {d['loop_over_batched']:.2f} vs baseline "
+                f"{ref['loop_over_batched']:.2f} (< 1/{tol:.1f}x tolerance)"
             )
     return regressions, compared
 

@@ -50,6 +50,11 @@ class SolverConfig:
               shrinking power-of-two trailing windows, indexed pivot-row
               gathers, fused TRSM->Schur) or "flat" (the full-block body,
               kept as the bit-parity oracle and benchmark baseline).
+    B:        batch size for the many-small-systems path, or None for a
+              single system.  `plan((B, N))` sets it; a batched plan
+              factorizes a [B, N, N] stack in one traced program (sequential
+              strategies only — the distributed schedules shard one large
+              matrix and reject B).
     """
 
     strategy: str = "auto"
@@ -61,6 +66,7 @@ class SolverConfig:
     v: int | None = None
     backend: str = "ref"
     hotloop: str = "windowed"
+    B: int | None = None
 
     def __post_init__(self):
         dt = np.dtype(self.dtype)
@@ -87,6 +93,10 @@ class SolverConfig:
             raise ValueError(
                 f"unknown hotloop {self.hotloop!r}; choose from {HOTLOOPS}"
             )
+        if self.B is not None and (not isinstance(self.B, int) or self.B < 1):
+            raise ValueError(
+                f"B must be a positive int batch size or None, got {self.B!r}"
+            )
 
     def with_(self, **changes) -> "SolverConfig":
         """Functional update (dataclasses.replace with validation rerun)."""
@@ -97,7 +107,8 @@ class SolverConfig:
 
         Only meaningful on a *resolved* config (concrete strategy + grid +
         backend); `plan()` resolves before keying, so a pallas plan and a ref
-        plan of the same problem never share a cache entry.
+        plan of the same problem never share a cache entry.  B is part of
+        the key, so `plan((B, N))` and `plan(N)` never collide.
         """
         return (N, self.dtype, self.strategy, self.pivot, self.grid, self.v,
-                self.backend, self.hotloop)
+                self.backend, self.hotloop, self.B)

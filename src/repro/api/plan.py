@@ -46,6 +46,7 @@ class FactorizationPlan:
                  mesh=None, comm: dict | None = None, run=None, kind: str = "lu"):
         self.N = N
         self.config = config
+        self.B = config.B  # batch size, or None for a single-system plan
         self.grid = grid
         self.mesh = mesh
         self.comm = dict(comm or {})
@@ -75,7 +76,9 @@ class FactorizationPlan:
         return self.hotloop
 
     def execute(self, A) -> Factorization:
-        """Factorize A [N, N] with the compiled program (no re-trace)."""
+        """Factorize A with the compiled program (no re-trace).
+
+        A is [N, N], or [B, N, N] for a batched plan (`plan((B, N))`)."""
         A = np.asarray(A)
         if A.dtype.kind == "c":
             raise ValueError(
@@ -90,8 +93,13 @@ class FactorizationPlan:
                 stacklevel=2,
             )
         A = A.astype(self.config.dtype, copy=False)
-        if A.shape != (self.N, self.N):
-            raise ValueError(f"plan was built for N={self.N}, got A of shape {A.shape}")
+        want = (self.N, self.N) if self.B is None else (self.B, self.N, self.N)
+        if A.shape != want:
+            what = f"N={self.N}" if self.B is None else f"B={self.B}, N={self.N}"
+            raise ValueError(
+                f"plan was built for {what} (expects shape {want}), "
+                f"got A of shape {A.shape}"
+            )
         F, rows = self._run(A)
         self.execute_count += 1
         return Factorization(
@@ -175,17 +183,31 @@ def resolve(N: int, config: SolverConfig) -> SolverConfig:
     raise RuntimeError(f"strategy resolution did not converge for {config}")
 
 
-def plan(N: int, config: SolverConfig | None = None, *, mesh=None,
-         **overrides) -> FactorizationPlan:
+def plan(N: int | tuple[int, int], config: SolverConfig | None = None, *,
+         mesh=None, **overrides) -> FactorizationPlan:
     """Get (or build) the compiled plan for factorizing N x N matrices.
 
-    `overrides` are SolverConfig fields, so `plan(256, strategy="conflux")`
-    works without constructing a config.  Passing an explicit `mesh`
-    bypasses the cache (meshes are caller-owned and unhashable).
+    `N` may be a `(B, N)` tuple, which builds a *batched* plan: one traced
+    program factorizing a [B, N, N] stack of independent systems (the
+    many-small-systems path; equivalent to `plan(N, B=B)`).  `overrides` are
+    SolverConfig fields, so `plan(256, strategy="conflux")` works without
+    constructing a config.  Passing an explicit `mesh` bypasses the cache
+    (meshes are caller-owned and unhashable).
     """
     config = config or SolverConfig()
     if overrides:
         config = config.with_(**overrides)
+    if isinstance(N, tuple):
+        if len(N) != 2:
+            raise ValueError(
+                f"plan() shape must be N or (B, N), got tuple of length {len(N)}"
+            )
+        B, N = N
+        if config.B is not None and config.B != B:
+            raise ValueError(
+                f"plan((B={B}, N)) conflicts with SolverConfig.B={config.B}"
+            )
+        config = config.with_(B=int(B))
     resolved = resolve(N, config)
     builder = get_strategy(resolved.strategy)
     if mesh is not None:
@@ -221,12 +243,16 @@ def plan(N: int, config: SolverConfig | None = None, *, mesh=None,
 def factor(A, config: SolverConfig | None = None, **overrides) -> Factorization:
     """One-shot convenience: plan (cached) + execute.
 
-    With no explicit config/dtype, the computation dtype follows A (an
-    explicit SolverConfig states the contract and wins).
+    A 2-D A factorizes one system; a 3-D [B, N, N] stack gets a batched
+    plan (`plan((B, N))`) factorizing all B systems in one program.  With
+    no explicit config/dtype, the computation dtype follows A (an explicit
+    SolverConfig states the contract and wins).
     """
     A = np.asarray(A)
     if config is None and "dtype" not in overrides and A.dtype.kind == "f":
         overrides["dtype"] = A.dtype.name
+    if A.ndim == 3:
+        return plan((A.shape[0], A.shape[1]), config, **overrides).execute(A)
     return plan(A.shape[0], config, **overrides).execute(A)
 
 

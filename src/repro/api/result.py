@@ -27,8 +27,7 @@ from repro.core.lu.grid import GridConfig
 from repro.core.lu.sequential import permutation_sign, unpack_factors
 
 
-@jax.jit
-def _packed_solve(F, rows, b):
+def _psolve(F, rows, b):
     """x = U^-1 L^-1 P b from packed masked factors (PA = LU)."""
     _, L, U = unpack_factors(F, rows)
     pb = b[rows]
@@ -36,29 +35,38 @@ def _packed_solve(F, rows, b):
     return jax.scipy.linalg.solve_triangular(U, y, lower=False)
 
 
-@jax.jit
-def _packed_reconstruct(F, rows):
+def _preconstruct(F, rows):
     P, L, U = unpack_factors(F, rows)
     return P.T @ (L @ U)
 
 
-@jax.jit
-def _packed_u_diag(F, rows):
+def _pudiag(F, rows):
     n = F.shape[0]
     return F[rows, jnp.arange(n)]
 
 
+# Single-system jitted programs, shared across instances — plus their vmapped
+# siblings for batched factorizations ([B, N, N] factors, [B, N] pivots).
+_packed_solve = jax.jit(_psolve)
+_packed_solve_batched = jax.jit(jax.vmap(_psolve))
+_packed_reconstruct = jax.jit(_preconstruct)
+_packed_reconstruct_batched = jax.jit(jax.vmap(_preconstruct))
+_packed_u_diag = jax.jit(_pudiag)
+_packed_u_diag_batched = jax.jit(jax.vmap(_pudiag))
+
 # jitted wrappers over the one implementation in core.cholesky.sequential
 _chol_solve = jax.jit(chol_solve)
+_chol_solve_batched = jax.jit(jax.vmap(chol_solve))
 _chol_reconstruct = jax.jit(chol_reconstruct)
+_chol_reconstruct_batched = jax.jit(jax.vmap(chol_reconstruct))
 
 
 @dataclass
 class Factorization:
     """Packed masked LU factors plus everything needed to consume them."""
 
-    F: np.ndarray  # packed factors, original row positions [N, N]
-    rows: np.ndarray  # pivot order (global row ids) [N]
+    F: np.ndarray  # packed factors, original row positions [N, N] ([B, N, N] batched)
+    rows: np.ndarray  # pivot order (global row ids) [N] ([B, N] batched)
     grid: GridConfig | None = None
     comm: dict = field(default_factory=dict)
     strategy: str = ""
@@ -70,7 +78,17 @@ class Factorization:
 
     @property
     def N(self) -> int:
-        return int(np.asarray(self.F).shape[0])
+        return int(np.asarray(self.F).shape[-1])
+
+    @property
+    def batched(self) -> bool:
+        """True when this holds B independent factorizations ([B, N, N])."""
+        return np.asarray(self.F).ndim == 3
+
+    @property
+    def B(self) -> int | None:
+        """Batch size, or None for a single-system factorization."""
+        return int(np.asarray(self.F).shape[0]) if self.batched else None
 
     @property
     def dtype(self):
@@ -78,6 +96,9 @@ class Factorization:
 
     def solve(self, b):
         """Solve A x = b.  b: [N] single RHS or [N, k] multi-RHS batch.
+
+        On a batched factorization b is [B, N] (one RHS per system) or
+        [B, N, k], and each system solves against its own factors.
 
         One jitted triangular-solve pair shared by all Factorization
         instances; a new RHS *shape* compiles once, then reuses.
@@ -101,6 +122,17 @@ class Factorization:
                 stacklevel=2,
             )
         b = jnp.asarray(b, dtype=self.dtype)
+        if self.batched:
+            if b.ndim not in (2, 3) or b.shape[:2] != (self.B, self.N):
+                raise ValueError(
+                    f"batched factorization: b must be [B, N] or [B, N, k] "
+                    f"with B={self.B}, N={self.N}, got shape {b.shape}"
+                )
+            if self.kind == "cholesky":
+                return _chol_solve_batched(jnp.asarray(self.F), b)
+            return _packed_solve_batched(
+                jnp.asarray(self.F), jnp.asarray(self.rows), b
+            )
         if b.ndim not in (1, 2) or b.shape[0] != self.N:
             raise ValueError(
                 f"b must be [N] or [N, k] with N={self.N}, got shape {b.shape}"
@@ -110,13 +142,24 @@ class Factorization:
         return _packed_solve(jnp.asarray(self.F), jnp.asarray(self.rows), b)
 
     def slogdet(self):
-        """(sign, log|det|) — overflow-safe; vectorized permutation sign."""
+        """(sign, log|det|) — overflow-safe; vectorized permutation sign.
+
+        Batched factorizations return [B]-shaped signs and log-dets."""
         if self.kind == "cholesky":
-            d = jnp.diagonal(jnp.asarray(self.F))  # det(A) = prod(diag(L))^2 > 0
-            return jnp.ones((), d.dtype), 2.0 * jnp.sum(jnp.log(d))
-        d = _packed_u_diag(jnp.asarray(self.F), jnp.asarray(self.rows))
-        sign = permutation_sign(self.rows)
-        return sign * jnp.prod(jnp.sign(d)), jnp.sum(jnp.log(jnp.abs(d)))
+            # det(A) = prod(diag(L))^2 > 0
+            d = jnp.diagonal(jnp.asarray(self.F), axis1=-2, axis2=-1)
+            return jnp.ones(d.shape[:-1], d.dtype), 2.0 * jnp.sum(jnp.log(d), axis=-1)
+        if self.batched:
+            d = _packed_u_diag_batched(jnp.asarray(self.F), jnp.asarray(self.rows))
+            sign = jnp.asarray(
+                [permutation_sign(r) for r in np.asarray(self.rows)], d.dtype
+            )
+        else:
+            d = _packed_u_diag(jnp.asarray(self.F), jnp.asarray(self.rows))
+            sign = permutation_sign(self.rows)
+        return sign * jnp.prod(jnp.sign(d), axis=-1), jnp.sum(
+            jnp.log(jnp.abs(d)), axis=-1
+        )
 
     def det(self):
         s, ld = self.slogdet()
@@ -125,13 +168,25 @@ class Factorization:
     def reconstruct(self):
         """Rebuild A (original row order) from the factors."""
         if self.kind == "cholesky":
+            if self.batched:
+                return _chol_reconstruct_batched(jnp.asarray(self.F))
             return _chol_reconstruct(jnp.asarray(self.F))
+        if self.batched:
+            return _packed_reconstruct_batched(
+                jnp.asarray(self.F), jnp.asarray(self.rows)
+            )
         return _packed_reconstruct(jnp.asarray(self.F), jnp.asarray(self.rows))
 
     def unpack(self):
-        """LU: (P, L, U) with P @ A = L @ U.  Cholesky: the lower factor L."""
+        """LU: (P, L, U) with P @ A = L @ U.  Cholesky: the lower factor L.
+
+        Batched factorizations unpack per system (leading B axis)."""
         if self.kind == "cholesky":
             return jnp.asarray(self.F)
+        if self.batched:
+            return jax.vmap(unpack_factors)(
+                jnp.asarray(self.F), jnp.asarray(self.rows)
+            )
         return unpack_factors(jnp.asarray(self.F), jnp.asarray(self.rows))
 
     def comm_report(self) -> str:

@@ -50,14 +50,20 @@ def _resolve_sequential(N: int, config: SolverConfig) -> SolverConfig:
 
 @register_strategy("sequential")
 def build_sequential(N: int, config: SolverConfig, mesh=None) -> FactorizationPlan:
-    from repro.core.lu.sequential import lu_masked_sequential
+    from repro.core.lu.sequential import (
+        lu_masked_sequential,
+        lu_masked_sequential_batched,
+    )
 
     v = config.v
     backend = config.backend
+    batched = config.B is not None
     p = FactorizationPlan(N, config)
 
     def _traced(A):
         p._note_trace()
+        if batched:
+            return lu_masked_sequential_batched(A, v=v, backend=backend)
         return lu_masked_sequential(A, v=v, backend=backend)
 
     fn = jax.jit(_traced)
@@ -78,7 +84,17 @@ build_sequential.resolve = _resolve_sequential
 # ---------------------------------------------------------------------------
 
 
+def _reject_batched(strategy: str, config: SolverConfig) -> None:
+    if config.B is not None:
+        raise ValueError(
+            f"strategy {strategy!r} shards one large matrix and does not "
+            f"support batched plans (B={config.B}); use 'sequential' / "
+            f"'sequential_chol' (or 'auto') for the many-small-systems path"
+        )
+
+
 def _resolve_conflux(N: int, config: SolverConfig) -> SolverConfig:
+    _reject_batched("conflux", config)
     if config.pivot == "none":
         raise ValueError(
             "pivot='none' is Cholesky-only (SPD needs no pivoting); LU "
@@ -165,6 +181,7 @@ build_conflux.resolve = _resolve_conflux
 def _resolve_baseline2d(N: int, config: SolverConfig) -> SolverConfig:
     from repro.core.lu.baseline2d import scalapack2d_grid
 
+    _reject_batched("baseline2d", config)
     changes: dict = {}
     if config.pivot != "partial":
         changes["pivot"] = "partial"  # the 2D baseline is defined by it
@@ -204,20 +221,31 @@ def _resolve_sequential_chol(N: int, config: SolverConfig) -> SolverConfig:
 
 @register_strategy("sequential_chol")
 def build_sequential_chol(N: int, config: SolverConfig, mesh=None) -> FactorizationPlan:
-    from repro.core.cholesky.sequential import chol_blocked_sequential
+    from repro.core.cholesky.sequential import (
+        chol_blocked_sequential,
+        chol_blocked_sequential_batched,
+    )
 
     v = config.v
     backend = config.backend
+    batched = config.B is not None
     p = FactorizationPlan(N, config, kind="cholesky")
 
     def _traced(A):
         p._note_trace()
+        if batched:
+            return chol_blocked_sequential_batched(A, v=v, backend=backend)
         return chol_blocked_sequential(A, v=v, backend=backend)
 
     fn = jax.jit(_traced)
 
     def run(A):
         L = fn(jnp.asarray(A))
+        if batched:
+            rows = np.broadcast_to(
+                np.arange(N, dtype=np.int64), (config.B, N)
+            ).copy()
+            return np.asarray(L), rows
         return np.asarray(L), np.arange(N, dtype=np.int64)
 
     p._run = run
@@ -230,6 +258,7 @@ build_sequential_chol.resolve = _resolve_sequential_chol
 def _resolve_cholesky25d(N: int, config: SolverConfig) -> SolverConfig:
     from repro.core.cholesky.conflux25d import chol_comm_volume
 
+    _reject_batched("cholesky25d", config)
     changes: dict = {"pivot": "none"} if config.pivot != "none" else {}
     if config.grid is None:
         P_target = config.P_target or len(jax.devices())
@@ -293,6 +322,15 @@ build_cholesky25d.resolve = _resolve_cholesky25d
 
 def _resolve_auto(N: int, config: SolverConfig) -> SolverConfig:
     n_dev = len(jax.devices())
+    if config.B is not None:
+        # Batched = many small independent systems; the distributed schedules
+        # shard one large matrix, so auto always picks the batched sequential.
+        if config.grid is not None:
+            raise ValueError(
+                f"auto: batched plans (B={config.B}) are sequential-only; an "
+                f"explicit grid {config.grid} cannot be honored"
+            )
+        return _resolve_sequential(N, config.with_(strategy="sequential"))
     if config.grid is not None:
         if n_dev < config.grid.P_used:
             raise ValueError(

@@ -3,6 +3,6 @@
 Submodules (import directly; kept lazy to avoid pulling jax for pure-math use):
     repro.core.xpart — X-partitioning lower-bound machinery
     repro.core.lu    — COnfLUX / baselines / cost models
-    repro.core.solve — deprecated lu_factor / lu_solve / slogdet shims
-                       (new code: repro.api plan/execute)
+    repro.core.solve — lu_solve over raw packed factors
+                       (everything else: repro.api plan/execute)
 """

@@ -10,6 +10,7 @@ backends without any backend-specific code here.  Strategies
 
 from repro.core.cholesky.sequential import (
     chol_blocked_sequential,
+    chol_blocked_sequential_batched,
     chol_reconstruct,
     chol_solve,
 )
@@ -17,6 +18,7 @@ from repro.core.cholesky.conflux25d import chol_comm_volume
 
 __all__ = [
     "chol_blocked_sequential",
+    "chol_blocked_sequential_batched",
     "chol_solve",
     "chol_reconstruct",
     "chol_comm_volume",

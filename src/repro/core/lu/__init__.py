@@ -3,6 +3,7 @@
 from repro.core.lu.sequential import (
     masked_lup,
     lu_masked_sequential,
+    lu_masked_sequential_batched,
     unpack_factors,
     permutation_sign,
     reconstruct,
@@ -15,24 +16,22 @@ from repro.core.lu.cost_models import (
     slate_model,
     COMM_MODELS,
 )
-from repro.core.lu.conflux import LUResult, conflux_lu, distributed_lu, lu_comm_volume
+from repro.core.lu.conflux import lu_comm_volume
 
 __all__ = [
     "masked_lup",
     "lu_masked_sequential",
+    "lu_masked_sequential_batched",
     "unpack_factors",
     "permutation_sign",
     "reconstruct",
     "GridConfig",
     "optimize_grid",
     "validate_layout",
-    "LUResult",
     "conflux_model",
     "candmc_model",
     "scalapack2d_model",
     "slate_model",
     "COMM_MODELS",
-    "conflux_lu",
-    "distributed_lu",
     "lu_comm_volume",
 ]

@@ -12,9 +12,6 @@ from __future__ import annotations
 
 import math
 
-import numpy as np
-
-from repro.api.result import Factorization
 from repro.core.lu.grid import GridConfig
 
 
@@ -27,23 +24,3 @@ def scalapack2d_grid(N: int, P: int, v: int = 32) -> GridConfig:
     while Py > 1 and (N % (v * Py)):
         Py //= 2
     return GridConfig(Px=Px, Py=Py, c=1, v=v, N=N)
-
-
-def scalapack2d_lu(A, P_target: int | None = None, v: int = 32, mesh=None) -> Factorization:
-    """2D block-cyclic LU with partial pivoting (the LibSci/SLATE stand-in).
-
-    Deprecated shim over `repro.api.plan` (strategy "baseline2d"): the
-    compiled plan is cached and reused across calls.
-    """
-    from repro.api import SolverConfig, plan
-    from repro.api.config import DEFAULT_DTYPE
-
-    A = np.asarray(A)
-    # Same integer/bool normalization as conflux_lu: legacy callers passed
-    # whatever ndarray they had; compute in the solver default float dtype.
-    dtype = A.dtype.name if A.dtype.kind not in "iub" else DEFAULT_DTYPE
-    cfg = SolverConfig(
-        strategy="baseline2d", pivot="partial", dtype=dtype,
-        P_target=P_target, v=v,
-    )
-    return plan(A.shape[0], cfg, mesh=mesh).execute(A)

@@ -46,12 +46,6 @@ from repro.core.lu.grid import GridConfig
 from repro.core.windows import window_bucket_index, window_buckets
 from repro.kernels.backend import get_backend
 
-# Deprecated alias: `Factorization` (repro.api.result) subsumes the old
-# LUResult dataclass — same F / rows / grid / comm fields, plus solve(),
-# slogdet(), reconstruct(), comm_report().
-LUResult = Factorization
-
-
 # ---------------------------------------------------------------------------
 # Block-cyclic layout helpers (shared with tests and the 2D baseline).
 # ---------------------------------------------------------------------------
@@ -361,38 +355,6 @@ def make_lu_mesh(cfg: GridConfig, devices=None) -> jax.sharding.Mesh:
         raise ValueError(f"grid {cfg} needs {need} devices, have {len(devices)}")
     arr = np.asarray(devices[:need]).reshape(cfg.Px, cfg.Py, cfg.c)
     return jax.sharding.Mesh(arr, ("px", "py", "pz"))
-
-
-def conflux_lu(A, grid: GridConfig | None = None, P_target: int | None = None,
-               M: float = 2**14, mesh=None, pivot: str = "tournament",
-               backend: str = "ref") -> Factorization:
-    """Factorize A (N x N) with the COnfLUX schedule on available devices.
-
-    Deprecated shim over `repro.api.plan`: the shard_map program is built
-    (traced + jitted) once per (N, dtype, grid, pivot) and reused from the
-    plan cache on every later call.  Returns a `Factorization` — packed
-    masked factors + pivot order (see sequential.unpack_factors) and the
-    instrumented per-processor communication volume of the schedule.
-    """
-    from repro.api import SolverConfig, plan
-    from repro.api.config import DEFAULT_DTYPE
-
-    A = np.asarray(A)
-    # Integer/bool matrices: compute in the solver default float dtype — an
-    # integer dtype would otherwise reach the jitted fori_loop and die with
-    # an opaque carry-type error.  (Complex stays as-is so SolverConfig can
-    # reject it with an actionable message.)
-    dtype = A.dtype.name if A.dtype.kind not in "iub" else DEFAULT_DTYPE
-    cfg = SolverConfig(
-        strategy="conflux", pivot=pivot, grid=grid, dtype=dtype,
-        M=float(M), P_target=P_target, backend=backend,
-    )
-    return plan(A.shape[0], cfg, mesh=mesh).execute(A)
-
-
-def distributed_lu(A, **kw) -> Factorization:
-    """Public entry point with automatic Processor Grid Optimization."""
-    return conflux_lu(A, **kw)
 
 
 # ---------------------------------------------------------------------------

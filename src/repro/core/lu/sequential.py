@@ -105,6 +105,53 @@ def lu_masked_sequential(A: jax.Array, v: int = 32, backend: str = "ref"):
     return F, rows
 
 
+@functools.partial(jax.jit, static_argnames=("v", "backend"))
+def lu_masked_sequential_batched(A: jax.Array, v: int = 32, backend: str = "ref"):
+    """Masked LU of B independent systems A [B, N, N] in one traced program.
+
+    The step body is the literal batched translation of
+    `lu_masked_sequential` — every matmul gains a leading batch dimension and
+    the local compute goes through the backend's `*_batched` primitives ("ref"
+    = `jax.vmap` of the single-system primitives, so this function is
+    bit-identical to `jax.vmap(lu_masked_sequential)`; "pallas" = the
+    batch-grid kernels, one launch per step for all B systems).
+
+    Returns (F [B, N, N], rows [B, N]).
+    """
+    from repro.kernels.backend import get_backend
+
+    bk = get_backend(backend)
+    B, N = A.shape[0], A.shape[1]
+    assert N % v == 0, "N must be a multiple of the panel width v"
+    nsteps = N // v
+
+    def step(t, carry):
+        F, active, rows = carry
+        c0 = t * v
+        panel = jax.lax.dynamic_slice(F, (0, 0, c0), (B, N, v))
+        Fp, order, _ = bk.panel_lup_batched(panel, active, v)
+        F = jax.lax.dynamic_update_slice(F, Fp, (0, 0, c0))
+        rows = jax.lax.dynamic_update_slice(rows, order.astype(jnp.int32), (0, c0))
+        piv_onehot = jax.nn.one_hot(order, N, dtype=F.dtype)  # [B, v, N]
+        active = active * (1.0 - piv_onehot.sum(1))
+        colmask = (jnp.arange(N) >= c0 + v).astype(F.dtype)  # [N]
+        L10 = Fp * active[:, :, None]
+        U00_packed = piv_onehot @ Fp  # [B, v, v]
+        L00 = jnp.tril(U00_packed, -1) + jnp.eye(v, dtype=F.dtype)
+        R01 = (piv_onehot @ F) * colmask[None, None, :]
+        F, U01 = bk.fused_trsm_schur_batched(
+            F, L00, R01, L10 * active[:, :, None], unit=True
+        )
+        F = F * (
+            1.0 - piv_onehot.sum(1)[:, :, None] * colmask[None, None, :]
+        ) + jnp.swapaxes(piv_onehot, 1, 2) @ (U01 * colmask[None, None, :])
+        return (F, active, rows)
+
+    init = (A, jnp.ones((B, N), A.dtype), jnp.zeros((B, N), jnp.int32))
+    F, _, rows = jax.lax.fori_loop(0, nsteps, step, init)
+    return F, rows
+
+
 def unpack_factors(F: jax.Array, rows: jax.Array):
     """Packed masked factors -> (P, L, U) with P @ A = L @ U (P = row selection)."""
     n = F.shape[0]

@@ -1,76 +1,25 @@
-"""Deprecated linear-algebra front-end — thin shims over `repro.api`.
+"""Factor-level solve helpers.
 
-These entry points predate the plan/execute redesign and are kept so old
-imports keep working.  New code should use:
+The deprecated pre-plan front-end (`lu_factor` / `solve` / `det` /
+`slogdet`) lived here until the plan/execute API fully replaced it; those
+shims are gone.  Use:
 
-    from repro.api import SolverConfig, plan
+    from repro.api import SolverConfig, factor, plan
     fact = plan(N, SolverConfig(strategy="auto")).execute(A)
     x = fact.solve(b); s, ld = fact.slogdet()
 
-The shims route through the cached plan registry, so repeated calls with
-the same (N, dtype, strategy, pivot, grid) no longer re-trace/re-jit.
+What remains is `lu_solve`, the pure function consuming raw packed masked
+factors — useful when the (F, rows) arrays came from somewhere other than a
+`Factorization` (checkpoints, multi-device gathers, tests of the packed
+format itself).
 """
 
 from __future__ import annotations
 
-import warnings
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.lu.sequential import unpack_factors
-
-
-def _warn(name: str):
-    warnings.warn(
-        f"repro.core.solve.{name} is deprecated; use repro.api.plan/"
-        f"Factorization instead",
-        DeprecationWarning,
-        stacklevel=3,
-    )
-
-
-def _factorize(A, v: int = 32, distributed: bool | None = None, **kw):
-    """Shared shim body: map the legacy knobs onto a SolverConfig."""
-    from repro.api import SolverConfig, plan
-    from repro.api.config import DEFAULT_DTYPE
-    from repro.api.strategies import default_panel_width
-
-    A = np.asarray(A)
-    N = A.shape[0]
-    mesh = kw.pop("mesh", None)
-    if distributed is None:
-        strategy = "auto"
-    elif distributed:
-        strategy = "conflux"
-    else:
-        strategy = "sequential"
-    grid = kw.pop("grid", None)
-    if strategy == "auto" and grid is not None and len(jax.devices()) < grid.P_used:
-        grid = None  # legacy lu_factor silently ran sequential in this case
-    cfg = SolverConfig(
-        strategy=strategy,
-        pivot=kw.pop("pivot", "tournament"),
-        grid=grid,
-        # int/bool -> default float; complex passes through so SolverConfig
-        # rejects it with an actionable error instead of silently dropping
-        # the imaginary parts.
-        dtype=A.dtype.name if A.dtype.kind not in "iub" else DEFAULT_DTYPE,
-        M=float(kw.pop("M", 2.0**14)),
-        P_target=kw.pop("P_target", None),
-        v=default_panel_width(N, start=v) if strategy in ("sequential", "auto") else None,
-    )
-    if kw:
-        raise TypeError(f"unknown lu_factor arguments: {sorted(kw)}")
-    return plan(N, cfg, mesh=mesh).execute(A)
-
-
-def lu_factor(A, v: int = 32, distributed: bool | None = None, **kw):
-    """Masked LU of A.  Returns (F, rows): packed factors + pivot order."""
-    _warn("lu_factor")
-    fact = _factorize(A, v=v, distributed=distributed, **kw)
-    return jnp.asarray(fact.F), jnp.asarray(fact.rows)
 
 
 def lu_solve(F, rows, b):
@@ -79,21 +28,3 @@ def lu_solve(F, rows, b):
     pb = jnp.asarray(b)[jnp.asarray(rows)]
     y = jax.scipy.linalg.solve_triangular(L, pb, lower=True, unit_diagonal=True)
     return jax.scipy.linalg.solve_triangular(U, y, lower=False)
-
-
-def solve(A, b, **kw):
-    """Direct dense solve via the cached solver plans."""
-    _warn("solve")
-    return _factorize(A, **kw).solve(b)
-
-
-def slogdet(A, **kw):
-    """(sign, log|det|) from the masked factors (overflow-safe)."""
-    _warn("slogdet")
-    return _factorize(A, **kw).slogdet()
-
-
-def det(A, **kw):
-    """Determinant (use slogdet for large N to avoid overflow)."""
-    _warn("det")
-    return _factorize(A, **kw).det()

@@ -77,6 +77,43 @@ class KernelBackend(Protocol):
         """
         ...
 
+    # -- batched variants: one leading batch axis, B independent systems ----
+    #
+    # The many-small-systems path (`plan((B, N))`) runs every primitive on a
+    # stack of systems at once.  "ref" implements these as `jax.vmap` of its
+    # single-system methods — guaranteeing bit-identity with a vmapped
+    # single-system plan — while "pallas" launches the batch-grid kernels
+    # (one (b, tile...) program per tile, a single launch for all B systems).
+
+    def panel_lup_batched(self, panel: jax.Array, weights: jax.Array, v: int):
+        """Masked LUP of B panels [B, R, v]; returns (F [B, R, v],
+        order [B, v] int32, ok [B, v] bool)."""
+        ...
+
+    def panel_chol_batched(self, A: jax.Array) -> jax.Array:
+        """Lower Cholesky factors of B SPD blocks A [B, v, v]."""
+        ...
+
+    def trsm_right_upper_batched(self, B: jax.Array, U: jax.Array) -> jax.Array:
+        """Per-system X_b U_b = B_b.  B [Bb, R, v], U [Bb, v, v] upper."""
+        ...
+
+    def trsm_left_lower_batched(self, L: jax.Array, B: jax.Array, *,
+                                unit: bool = True) -> jax.Array:
+        """Per-system L_b X_b = B_b.  L [Bb, v, v] (unit-)lower, B [Bb, v, C]."""
+        ...
+
+    def schur_update_batched(self, A: jax.Array, L: jax.Array,
+                             U: jax.Array) -> jax.Array:
+        """Per-system A_b - L_b @ U_b.  A [B, M, N], L [B, M, K], U [B, K, N]."""
+        ...
+
+    def fused_trsm_schur_batched(self, A: jax.Array, L00: jax.Array,
+                                 R01: jax.Array, L10: jax.Array, *,
+                                 unit: bool = True):
+        """Per-system fused steps 5+6; returns (A_new [B, M, C], U01 [B, v, C])."""
+        ...
+
 
 _BACKENDS: dict[str, KernelBackend] = {}
 
@@ -143,6 +180,29 @@ class RefBackend:
         U01 = self.trsm_left_lower(L00, R01, unit=unit)
         return A - L10 @ U01, U01
 
+    # Batched = vmap of the single-system methods, so a `plan((B, N))` on the
+    # ref backend is bit-identical to `jax.vmap` over single-system plans.
+
+    def panel_lup_batched(self, panel, weights, v):
+        return jax.vmap(lambda p, w: self.panel_lup(p, w, v))(panel, weights)
+
+    def panel_chol_batched(self, A):
+        return jax.vmap(self.panel_chol)(A)
+
+    def trsm_right_upper_batched(self, B, U):
+        return jax.vmap(self.trsm_right_upper)(B, U)
+
+    def trsm_left_lower_batched(self, L, B, *, unit=True):
+        return jax.vmap(lambda l, b: self.trsm_left_lower(l, b, unit=unit))(L, B)
+
+    def schur_update_batched(self, A, L, U):
+        return jax.vmap(self.schur_update)(A, L, U)
+
+    def fused_trsm_schur_batched(self, A, L00, R01, L10, *, unit=True):
+        return jax.vmap(
+            lambda a, l00, r01, l10: self.fused_trsm_schur(a, l00, r01, l10, unit=unit)
+        )(A, L00, R01, L10)
+
 
 class PallasBackend:
     """The MXU-tiled Pallas kernels (`repro.kernels.ops`); the ops wrappers
@@ -182,6 +242,39 @@ class PallasBackend:
         from repro.kernels import ops
 
         return ops.fused_trsm_schur(A, L00, R01, L10, unit=unit)
+
+    # Batched = the batch-grid kernels: one launch covers all B systems.
+
+    def panel_lup_batched(self, panel, weights, v):
+        from repro.kernels import ops
+
+        F, order, ok = ops.lu_panel_batched(panel, weights.astype(panel.dtype))
+        return F, order, ok != 0
+
+    def panel_chol_batched(self, A):
+        from repro.kernels import ops
+
+        return ops.chol_panel_batched(A)
+
+    def trsm_right_upper_batched(self, B, U):
+        from repro.kernels import ops
+
+        return ops.trsm_right_upper_batched(B, U)
+
+    def trsm_left_lower_batched(self, L, B, *, unit=True):
+        from repro.kernels import ops
+
+        return ops.trsm_left_lower_batched(L, B, unit=unit)
+
+    def schur_update_batched(self, A, L, U):
+        from repro.kernels import ops
+
+        return ops.schur_update_batched(A, L, U)
+
+    def fused_trsm_schur_batched(self, A, L00, R01, L10, *, unit=True):
+        from repro.kernels import ops
+
+        return ops.fused_trsm_schur_batched(A, L00, R01, L10, unit=unit)
 
 
 register_backend("ref", RefBackend())

@@ -27,6 +27,19 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def _forward_solve(L, B, *, v: int, unit: bool):
+    """Forward substitution L @ X = B (same fp32 body as trsm.py)."""
+
+    def body(r, X):
+        partial = (L[r, :] * (jax.lax.broadcasted_iota(jnp.int32, (v,), 0) < r)) @ X
+        xr = B[r, :] - partial
+        if not unit:
+            xr = xr / L[r, r]
+        return X.at[r, :].set(xr)
+
+    return jax.lax.fori_loop(0, v, body, jnp.zeros_like(B))
+
+
 def _kernel(a_ref, l00_ref, r01_ref, l10_ref, o_ref, u_ref, u_acc, *,
             v: int, unit: bool):
     i = pl.program_id(1)  # row tile — the fast dimension; column tile is slow
@@ -35,23 +48,34 @@ def _kernel(a_ref, l00_ref, r01_ref, l10_ref, o_ref, u_ref, u_acc, *,
     def _solve():
         # Forward substitution L00 @ U = R01 for this column tile, once per
         # column tile; U stays resident in VMEM for every row step below.
-        L = l00_ref[...].astype(jnp.float32)
-        B = r01_ref[...].astype(jnp.float32)
-
-        def body(r, X):
-            partial = (L[r, :] * (jax.lax.broadcasted_iota(jnp.int32, (v,), 0) < r)) @ X
-            xr = B[r, :] - partial
-            if not unit:
-                xr = xr / L[r, r]
-            return X.at[r, :].set(xr)
-
-        X = jax.lax.fori_loop(0, v, body, jnp.zeros_like(B))
+        X = _forward_solve(l00_ref[...].astype(jnp.float32),
+                           r01_ref[...].astype(jnp.float32), v=v, unit=unit)
         u_acc[...] = X
         u_ref[...] = X.astype(u_ref.dtype)
 
     o_ref[...] = (
         a_ref[...].astype(jnp.float32)
         - jnp.dot(l10_ref[...].astype(jnp.float32), u_acc[...],
+                  preferred_element_type=jnp.float32)
+    ).astype(o_ref.dtype)
+
+
+def _batched_kernel(a_ref, l00_ref, r01_ref, l10_ref, o_ref, u_ref, u_acc, *,
+                    v: int, unit: bool):
+    i = pl.program_id(2)  # row tile — fastest; (system, column tile) slower
+
+    @pl.when(i == 0)
+    def _solve():
+        # Once per (system, column tile): this system's triangle solves its
+        # own R01 tile, and U stays VMEM-resident for every row step below.
+        X = _forward_solve(l00_ref[0].astype(jnp.float32),
+                           r01_ref[0].astype(jnp.float32), v=v, unit=unit)
+        u_acc[...] = X
+        u_ref[0] = X.astype(u_ref.dtype)
+
+    o_ref[0] = (
+        a_ref[0].astype(jnp.float32)
+        - jnp.dot(l10_ref[0].astype(jnp.float32), u_acc[...],
                   preferred_element_type=jnp.float32)
     ).astype(o_ref.dtype)
 
@@ -84,6 +108,49 @@ def fused_trsm_schur(A, L00, R01, L10, *, bm: int = 128, bc: int = 128,
         out_shape=[
             jax.ShapeDtypeStruct((M, C), A.dtype),
             jax.ShapeDtypeStruct((v, C), R01.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((v, bc), jnp.float32)],
+        interpret=interpret,
+    )(A, L00, R01, L10)
+
+
+def fused_trsm_schur_batched(A, L00, R01, L10, *, bm: int = 128, bc: int = 128,
+                             unit: bool = True, interpret: bool = False):
+    """B independent fused TRSM -> Schur steps from one launch.
+
+    A [B, M, C], L00 [B, v, v] (unit-)lower, R01 [B, v, C], L10 [B, M, v].
+    Grid (b, column tile, row tile) — each system's column tile solves its
+    own U01 tile once (first row step) into VMEM scratch, then every row
+    step of that system consumes the resident tile.
+    Returns (A_new [B, M, C], U01 [B, v, C]).
+    """
+    B, M, C = A.shape
+    v = L00.shape[1]
+    bm, bc = min(bm, M), min(bc, C)
+    assert M % bm == 0 and C % bc == 0
+    grid = (B, C // bc, M // bm)  # row tiles fastest, per (system, column tile)
+    return pl.pallas_call(
+        functools.partial(_batched_kernel, v=v, unit=unit),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bc), lambda b, j, i: (b, i, j),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, v, v), lambda b, j, i: (b, 0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, v, bc), lambda b, j, i: (b, 0, j),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, bm, v), lambda b, j, i: (b, i, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm, bc), lambda b, j, i: (b, i, j),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, v, bc), lambda b, j, i: (b, 0, j),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, M, C), A.dtype),
+            jax.ShapeDtypeStruct((B, v, C), R01.dtype),
         ],
         scratch_shapes=[pltpu.VMEM((v, bc), jnp.float32)],
         interpret=interpret,

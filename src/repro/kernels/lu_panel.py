@@ -4,6 +4,11 @@ One program factorizes an [R, v] panel held entirely in VMEM: v rounds of
 (masked argmax pivot -> scale column -> rank-1 trailing update), with row
 masking instead of swaps (paper §7.3).  R*v stays comfortably inside VMEM
 for tournament panels (R <= 4096, v <= 128 -> <= 2 MB fp32).
+
+`lu_panel_batched` factorizes B independent panels from a single launch by
+adding a batch grid dimension — one program per system, same per-panel
+rounds — which is what keeps the MXU busy when the systems are individually
+small (the many-small-systems serving workload).
 """
 
 from __future__ import annotations
@@ -16,9 +21,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(panel_ref, w_ref, f_ref, order_ref, ok_ref, *, v: int):
-    F = panel_ref[...]
-    w = w_ref[...]
+def _panel_rounds(F, w, *, v: int):
+    """The v pivot/scale/update rounds on one [R, v] panel in registers."""
     R = F.shape[0]
     order0 = jnp.zeros((v,), jnp.int32)
     ok0 = jnp.zeros((v,), jnp.int32)
@@ -39,10 +43,21 @@ def _kernel(panel_ref, w_ref, f_ref, order_ref, ok_ref, *, v: int):
         F = F - jnp.outer(jnp.where(active, mult, 0.0), F[p, :] * colmask)
         return F, w, order, ok
 
-    F, w, order, ok = jax.lax.fori_loop(0, v, body, (F, w, order0, ok0))
+    return jax.lax.fori_loop(0, v, body, (F, w, order0, ok0))
+
+
+def _kernel(panel_ref, w_ref, f_ref, order_ref, ok_ref, *, v: int):
+    F, _, order, ok = _panel_rounds(panel_ref[...], w_ref[...], v=v)
     f_ref[...] = F
     order_ref[...] = order
     ok_ref[...] = ok
+
+
+def _batched_kernel(panel_ref, w_ref, f_ref, order_ref, ok_ref, *, v: int):
+    F, _, order, ok = _panel_rounds(panel_ref[0], w_ref[0], v=v)
+    f_ref[0] = F
+    order_ref[0] = order
+    ok_ref[0] = ok
 
 
 def lu_panel(panel, weights, *, interpret: bool = False):
@@ -67,6 +82,34 @@ def lu_panel(panel, weights, *, interpret: bool = False):
             jax.ShapeDtypeStruct((R, v), panel.dtype),
             jax.ShapeDtypeStruct((v,), jnp.int32),
             jax.ShapeDtypeStruct((v,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(panel, weights)
+
+
+def lu_panel_batched(panel, weights, *, interpret: bool = False):
+    """Masked LUP of B independent panels [B, R, v], weights [B, R].
+
+    One (b,) grid program per system — B small panel factorizations from a
+    single kernel launch.  Returns (F [B, R, v], order [B, v], ok [B, v]).
+    """
+    B, R, v = panel.shape
+    return pl.pallas_call(
+        functools.partial(_batched_kernel, v=v),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, R, v), lambda b: (b, 0, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, R), lambda b: (b, 0), memory_space=pltpu.VMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, R, v), lambda b: (b, 0, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, v), lambda b: (b, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, v), lambda b: (b, 0), memory_space=pltpu.VMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, R, v), panel.dtype),
+            jax.ShapeDtypeStruct((B, v), jnp.int32),
+            jax.ShapeDtypeStruct((B, v), jnp.int32),
         ],
         interpret=interpret,
     )(panel, weights)

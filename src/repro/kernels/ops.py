@@ -96,6 +96,67 @@ def fused_trsm_schur(A, L00, R01, L10, bm=128, bc=128, unit=True, interpret=None
                              _interp(interpret))
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lu_panel_batched(panel, weights, interpret=None):
+    return _lp.lu_panel_batched(panel, weights, interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def chol_panel_batched(A, interpret=None):
+    return _cp.chol_panel_batched(A, interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("br", "interpret"))
+def _trsm_right_upper_batched(B, U, br, interpret):
+    return _tr.trsm_right_upper_batched(B, U, br=br, interpret=interpret)
+
+
+def trsm_right_upper_batched(B, U, br=256, interpret=None):
+    return _trsm_right_upper_batched(B, U, _fit(br, B.shape[1]),
+                                     _interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "unit", "interpret"))
+def _trsm_left_lower_batched(L, B, bc, unit, interpret):
+    return _tr.trsm_left_lower_batched(L, B, bc=bc, unit=unit,
+                                       interpret=interpret)
+
+
+def trsm_left_lower_batched(L, B, bc=256, unit=True, interpret=None):
+    return _trsm_left_lower_batched(L, B, _fit(bc, B.shape[2]), unit,
+                                    _interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _schur_update_batched(A, L, U, bm, bn, bk, interpret):
+    return _su.schur_update_batched(A, L, U, bm=bm, bn=bn, bk=bk,
+                                    interpret=interpret)
+
+
+def schur_update_batched(A, L, U, bm=128, bn=128, bk=128, interpret=None):
+    _, M, N = A.shape
+    K = L.shape[2]
+    return _schur_update_batched(A, L, U, _fit(bm, M), _fit(bn, N), _fit(bk, K),
+                                 _interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bc", "unit", "interpret"))
+def _fused_trsm_schur_batched(A, L00, R01, L10, bm, bc, unit, interpret):
+    return _fs.fused_trsm_schur_batched(A, L00, R01, L10, bm=bm, bc=bc,
+                                        unit=unit, interpret=interpret)
+
+
+def fused_trsm_schur_batched(A, L00, R01, L10, bm=128, bc=128, unit=True,
+                             interpret=None):
+    """Per-system U01 = L00^-1 R01 and A - L10 @ U01 from one launch.
+
+    Returns (A_new, U01) with leading batch axes — see `repro.kernels.fused_schur`.
+    """
+    _, M, C = A.shape
+    return _fused_trsm_schur_batched(A, L00, R01, L10, _fit(bm, M), _fit(bc, C),
+                                     unit, _interp(interpret))
+
+
 @functools.partial(
     jax.jit, static_argnames=("causal", "window", "softcap", "bq", "bkv", "interpret")
 )

@@ -33,6 +33,22 @@ def _kernel(a_ref, l_ref, u_ref, o_ref, acc_ref, *, nk: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _batched_kernel(a_ref, l_ref, u_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = a_ref[0].astype(jnp.float32)
+
+    acc_ref[...] -= jnp.dot(
+        l_ref[0], u_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
 def schur_update(A, L, U, *, bm: int = 128, bn: int = 128, bk: int = 128,
                  interpret: bool = False):
     """A [M,N] - L [M,K] @ U [K,N], tiled for the 128x128 MXU."""
@@ -51,6 +67,39 @@ def schur_update(A, L, U, *, bm: int = 128, bn: int = 128, bk: int = 128,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j), memory_space=pltpu.VMEM),
         out_shape=jax.ShapeDtypeStruct((M, N), A.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(A, L, U)
+
+
+def schur_update_batched(A, L, U, *, bm: int = 128, bn: int = 128, bk: int = 128,
+                         interpret: bool = False):
+    """B independent rank-K updates from one launch:  A_b - L_b @ U_b.
+
+    A [B,M,N], L [B,M,K], U [B,K,N]; grid (b, i, j, k) — one program per
+    output tile per system, k (the contraction) fastest so the fp32 VMEM
+    accumulator carries across the k-steps exactly as in the single-system
+    kernel.
+    """
+    B, M, N = A.shape
+    K = L.shape[2]
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+    grid = (B, M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        functools.partial(_batched_kernel, nk=grid[3]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bn), lambda b, i, j, k: (b, i, j),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, bm, bk), lambda b, i, j, k: (b, i, k),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, bk, bn), lambda b, i, j, k: (b, k, j),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j, k: (b, i, j),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((B, M, N), A.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(A, L, U)

@@ -6,6 +6,10 @@ trsm_left_lower:   X = L^-1 @ B   (U01 computation; L unit-lower)
 The v x v triangle sits in VMEM; the long dimension is tiled by the grid.
 Inside a tile the solve is a fori over the v columns/rows (forward
 substitution) — v is the paper's blocking parameter (MXU-sized, <= 256).
+
+The `*_batched` variants solve B independent systems from one launch by
+prepending a batch grid dimension — one (b, tile) program per tile, each
+system with its own triangle.
 """
 
 from __future__ import annotations
@@ -18,9 +22,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _right_upper_kernel(b_ref, u_ref, x_ref, *, v: int):
-    B = b_ref[...].astype(jnp.float32)
-    U = u_ref[...].astype(jnp.float32)
+def _right_upper_solve(B, U, *, v: int):
+    """Forward substitution for X U = B, fp32 in/out."""
 
     def body(j, X):
         # X[:, j] = (B[:, j] - X[:, :j] @ U[:j, j]) / U[j, j]
@@ -28,13 +31,11 @@ def _right_upper_kernel(b_ref, u_ref, x_ref, *, v: int):
         xj = (B[:, j] - partial) / U[j, j]
         return X.at[:, j].set(xj)
 
-    X = jax.lax.fori_loop(0, v, body, jnp.zeros_like(B))
-    x_ref[...] = X.astype(x_ref.dtype)
+    return jax.lax.fori_loop(0, v, body, jnp.zeros_like(B))
 
 
-def _left_lower_kernel(l_ref, b_ref, x_ref, *, v: int, unit: bool):
-    L = l_ref[...].astype(jnp.float32)
-    B = b_ref[...].astype(jnp.float32)
+def _left_lower_solve(L, B, *, v: int, unit: bool):
+    """Forward substitution for L X = B, fp32 in/out."""
 
     def body(i, X):
         partial = (L[i, :] * (jax.lax.broadcasted_iota(jnp.int32, (v,), 0) < i)) @ X
@@ -43,8 +44,35 @@ def _left_lower_kernel(l_ref, b_ref, x_ref, *, v: int, unit: bool):
             xi = xi / L[i, i]
         return X.at[i, :].set(xi)
 
-    X = jax.lax.fori_loop(0, v, body, jnp.zeros_like(B))
+    return jax.lax.fori_loop(0, v, body, jnp.zeros_like(B))
+
+
+def _right_upper_kernel(b_ref, u_ref, x_ref, *, v: int):
+    X = _right_upper_solve(
+        b_ref[...].astype(jnp.float32), u_ref[...].astype(jnp.float32), v=v
+    )
     x_ref[...] = X.astype(x_ref.dtype)
+
+
+def _right_upper_batched_kernel(b_ref, u_ref, x_ref, *, v: int):
+    X = _right_upper_solve(
+        b_ref[0].astype(jnp.float32), u_ref[0].astype(jnp.float32), v=v
+    )
+    x_ref[0] = X.astype(x_ref.dtype)
+
+
+def _left_lower_kernel(l_ref, b_ref, x_ref, *, v: int, unit: bool):
+    X = _left_lower_solve(
+        l_ref[...].astype(jnp.float32), b_ref[...].astype(jnp.float32), v=v, unit=unit
+    )
+    x_ref[...] = X.astype(x_ref.dtype)
+
+
+def _left_lower_batched_kernel(l_ref, b_ref, x_ref, *, v: int, unit: bool):
+    X = _left_lower_solve(
+        l_ref[0].astype(jnp.float32), b_ref[0].astype(jnp.float32), v=v, unit=unit
+    )
+    x_ref[0] = X.astype(x_ref.dtype)
 
 
 def trsm_right_upper(B, U, *, br: int = 256, interpret: bool = False):
@@ -65,6 +93,25 @@ def trsm_right_upper(B, U, *, br: int = 256, interpret: bool = False):
     )(B, U)
 
 
+def trsm_right_upper_batched(B, U, *, br: int = 256, interpret: bool = False):
+    """X_b U_b = B_b per system.  B [Bb, R, v], U [Bb, v, v] upper."""
+    Bb, R, v = B.shape
+    br = min(br, R)
+    assert R % br == 0
+    return pl.pallas_call(
+        functools.partial(_right_upper_batched_kernel, v=v),
+        grid=(Bb, R // br),
+        in_specs=[
+            pl.BlockSpec((1, br, v), lambda b, i: (b, i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, v, v), lambda b, i: (b, 0, 0), memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((1, br, v), lambda b, i: (b, i, 0),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((Bb, R, v), B.dtype),
+        interpret=interpret,
+    )(B, U)
+
+
 def trsm_left_lower(L, B, *, bc: int = 256, unit: bool = True, interpret: bool = False):
     """L X = B  ->  X = L^-1 B.  L [v, v] (unit-)lower, B [v, C]."""
     v, C = B.shape
@@ -79,5 +126,25 @@ def trsm_left_lower(L, B, *, bc: int = 256, unit: bool = True, interpret: bool =
         ],
         out_specs=pl.BlockSpec((v, bc), lambda i: (0, i), memory_space=pltpu.VMEM),
         out_shape=jax.ShapeDtypeStruct((v, C), B.dtype),
+        interpret=interpret,
+    )(L, B)
+
+
+def trsm_left_lower_batched(L, B, *, bc: int = 256, unit: bool = True,
+                            interpret: bool = False):
+    """L_b X_b = B_b per system.  L [Bb, v, v] (unit-)lower, B [Bb, v, C]."""
+    Bb, v, C = B.shape
+    bc = min(bc, C)
+    assert C % bc == 0
+    return pl.pallas_call(
+        functools.partial(_left_lower_batched_kernel, v=v, unit=unit),
+        grid=(Bb, C // bc),
+        in_specs=[
+            pl.BlockSpec((1, v, v), lambda b, i: (b, 0, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, v, bc), lambda b, i: (b, 0, i), memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((1, v, bc), lambda b, i: (b, 0, i),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((Bb, v, C), B.dtype),
         interpret=interpret,
     )(L, B)

@@ -20,6 +20,17 @@ solve requests share one factorized system:
     eng.factor(A)
     t1, t2 = eng.submit(b1), eng.submit(b2)
     xs = eng.flush()               # one [N, 2] solve; xs[t1], xs[t2]
+
+Batch slots (the many-small-systems path): `submit_system` queues whole
+(A, b) systems and `flush_systems` factorizes all of them as ONE batched
+plan execution (`plan((B, N))` — a single traced program, batch-grid Pallas
+kernels on the pallas backend) instead of a Python loop of B small
+factorizations that each leave the MXU idle.  Queued systems are padded to
+the next power-of-two slot size with identity systems, so the plan cache
+holds one batched plan per slot size rather than one per request count:
+
+    t1, t2, t3 = (eng.submit_system(A_i, b_i) for ...)
+    xs = eng.flush_systems()       # one plan((4, N)) execute + batched solve
 """
 
 from __future__ import annotations
@@ -41,12 +52,18 @@ class SolveEngine:
         self.N = N
         self._last: Factorization | None = None
         self._pending: list[np.ndarray] = []  # queued RHS awaiting flush()
+        # queued (A, b) systems awaiting flush_systems()
+        self._pending_systems: list[tuple[np.ndarray, np.ndarray]] = []
         self._n_factor = 0
         self._n_solve = 0
         self._n_batched = 0  # batched solve dispatches (flush groups)
         self._n_batched_rhs = 0  # RHS vectors that rode a batched dispatch
+        self._n_batched_factor = 0  # batched factorizations (flush_systems calls)
+        self._n_batched_systems = 0  # systems that rode a batched factorization
+        self._n_batch_pad = 0  # identity systems added to fill batch slots
         self._t_factor = 0.0
         self._t_solve = 0.0
+        self._t_batch = 0.0
 
     def factor(self, A) -> Factorization:
         """Factorize one N x N system on the compiled plan."""
@@ -128,6 +145,88 @@ class SolveEngine:
         X = np.asarray(X)
         return [X[:, j] for j in range(X.shape[1])]
 
+    def submit_system(self, A, b) -> int:
+        """Queue a whole (A, b) system for a batched factorize+solve.
+
+        Returns the ticket index into the list `flush_systems()` returns.
+        Both the matrix ([N, N]) and the RHS ([N], length matching the
+        plan's N) are validated eagerly so a malformed request fails at
+        submit time, not inside a batch holding other requests hostage.
+        """
+        A = np.asarray(A)
+        b = np.asarray(b)
+        if A.shape != (self.N, self.N):
+            raise ValueError(
+                f"submit_system takes an [N, N] matrix with N={self.N}, "
+                f"got shape {A.shape}"
+            )
+        if b.shape != (self.N,):
+            raise ValueError(
+                f"submit_system takes a single [N] RHS with N={self.N}, "
+                f"got shape {b.shape}"
+            )
+        for name, arr in (("matrix", A), ("RHS", b)):
+            if arr.dtype.kind not in "fiub":
+                raise ValueError(
+                    f"submit_system takes a real {name} (plan computes in "
+                    f"{self.config.dtype}); got dtype {arr.dtype.name}"
+                )
+        self._pending_systems.append((A, b))
+        return len(self._pending_systems) - 1
+
+    @staticmethod
+    def _slot(k: int) -> int:
+        """Next power-of-two batch slot >= k (bounds plan-cache pollution:
+        one batched plan per slot size instead of one per request count)."""
+        return 1 << max(k - 1, 0).bit_length()
+
+    def _batched_plan(self, slot: int):
+        """The cached batched plan matching this engine's config at size slot.
+
+        Batched plans are sequential-only, so a distributed engine strategy
+        maps to its sequential sibling of the same kind (the plan cache makes
+        repeat slot sizes free).
+        """
+        strategy = "sequential_chol" if self.plan.kind == "cholesky" else "sequential"
+        return plan(
+            (slot, self.N),
+            self.config.with_(strategy=strategy, grid=None, B=None),
+        )
+
+    def flush_systems(self):
+        """Factorize and solve every pending (A, b) system as one batch.
+
+        Stacks the queued systems into a [slot, N, N] block (padded to the
+        next power-of-two slot with identity systems and zero RHS), runs ONE
+        batched plan execution plus ONE batched solve, and returns the
+        solutions in submit order.  The queue is cleared only after the
+        batch succeeds, so a failing dispatch leaves every request queued
+        for a retry instead of silently dropping them.
+        """
+        if not self._pending_systems:
+            return []
+        pending = self._pending_systems
+        k = len(pending)
+        slot = self._slot(k)
+        dtype = np.dtype(self.config.dtype)
+        A = np.empty((slot, self.N, self.N), dtype)
+        rhs = np.zeros((slot, self.N), dtype)
+        for i, (Ai, bi) in enumerate(pending):
+            A[i] = Ai
+            rhs[i] = bi
+        A[k:] = np.eye(self.N, dtype=dtype)  # identity pad: trivially factorizable
+        bplan = self._batched_plan(slot)
+        t0 = time.perf_counter()
+        fact = bplan.execute(A)
+        X = jax.block_until_ready(fact.solve(rhs))
+        self._t_batch += time.perf_counter() - t0
+        self._pending_systems = []
+        self._n_batched_factor += 1
+        self._n_batched_systems += k
+        self._n_batch_pad += slot - k
+        X = np.asarray(X)
+        return [X[i] for i in range(k)]
+
     def stats(self) -> dict:
         """Engine counters + the global plan-cache hit/miss trajectory."""
         return {
@@ -139,10 +238,15 @@ class SolveEngine:
             "solves": self._n_solve,
             "batched_solves": self._n_batched,
             "batched_rhs": self._n_batched_rhs,
+            "batched_factorizations": self._n_batched_factor,
+            "batched_systems": self._n_batched_systems,
+            "batch_pad_systems": self._n_batch_pad,
             "pending": len(self._pending),
+            "pending_systems": len(self._pending_systems),
             "trace_count": self.plan.trace_count,
             "factor_s_total": round(self._t_factor, 6),
             "solve_s_total": round(self._t_solve, 6),
+            "batch_s_total": round(self._t_batch, 6),
             # includes the LRU hit/miss/eviction + size/capacity counters
             "plan_cache": plan_cache_stats(),
         }

@@ -15,8 +15,7 @@ import jax.numpy as jnp
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 
-from repro.core.lu.baseline2d import scalapack2d_lu
-from repro.core.lu.conflux import conflux_lu
+from repro.api import SolverConfig, factor
 from repro.core.lu.grid import GridConfig
 from repro.core.lu.sequential import reconstruct
 
@@ -42,19 +41,18 @@ def main():
     ]
     for g in grids:
         A = rng.standard_normal((g.N, g.N)).astype(np.float32)
-        check(conflux_lu(A, grid=g), A, f"conflux {g}")
+        check(factor(A, SolverConfig(strategy="conflux", grid=g)), A, f"conflux {g}")
     A = rng.standard_normal((128, 128)).astype(np.float32)
-    check(scalapack2d_lu(A, P_target=8, v=16), A, "scalapack2d [2x4]")
+    check(factor(A, SolverConfig(strategy="baseline2d", P_target=8, v=16)),
+          A, "scalapack2d [2x4]")
     # auto grid selection end-to-end
     A = rng.standard_normal((128, 128)).astype(np.float32)
-    from repro.core.lu.conflux import distributed_lu
-
-    res = distributed_lu(A, M=2048.0)
+    res = factor(A, SolverConfig(strategy="auto", M=2048.0))
     check(res, A, f"auto-grid {res.grid}")
 
     # plan/execute API on the full device count: cached plan, single trace,
     # multi-RHS solve vs numpy.
-    from repro.api import GridConfig as GC, SolverConfig, plan, plan_cache_stats
+    from repro.api import GridConfig as GC, plan, plan_cache_stats
 
     N = 128
     cfg = SolverConfig(strategy="conflux", grid=GC(Px=2, Py=2, c=2, v=16, N=N))

@@ -1,0 +1,363 @@
+"""Batched many-small-systems path: plan((B, N)) end to end.
+
+Covers the full stack the batch dimension threads through: the batch-grid
+Pallas kernels vs their single-system siblings, the batched sequential
+oracles vs vmapped/looped single-system runs (bit-identity within a backend,
+identical pivots + allclose across backends — the parity-suite standard),
+the plan-cache key isolation of batched plans, the batched Factorization
+methods, and the SolveEngine batch slots.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import (
+    SolverConfig,
+    clear_plan_cache,
+    factor,
+    plan,
+    plan_cache_stats,
+    resolve,
+    set_plan_cache_capacity,
+)
+from repro.core.cholesky.sequential import (
+    chol_blocked_sequential,
+    chol_blocked_sequential_batched,
+)
+from repro.core.lu.sequential import (
+    lu_masked_sequential,
+    lu_masked_sequential_batched,
+)
+from repro.serving.solve_engine import SolveEngine
+
+RNG = np.random.default_rng(11)
+BACKENDS = ("ref", "pallas")
+
+
+def _stack(B, n, dtype="float32"):
+    return RNG.standard_normal((B, n, n)).astype(dtype)
+
+
+def _spd_stack(B, n, dtype="float32"):
+    M = RNG.standard_normal((B, n, n)).astype(dtype)
+    return np.einsum("bij,bkj->bik", M, M) + n * np.eye(n, dtype=dtype)
+
+
+class TestBatchedKernels:
+    """Batch-grid kernels match their single-system siblings bit-for-bit."""
+
+    def test_lu_panel_batched_matches_single(self):
+        from repro.kernels import ops
+
+        panel = jnp.asarray(RNG.standard_normal((3, 16, 8)), jnp.float32)
+        w = jnp.ones((3, 16), jnp.float32)
+        Fb, orderb, okb = ops.lu_panel_batched(panel, w)
+        for b in range(3):
+            F1, o1, k1 = ops.lu_panel(panel[b], w[b])
+            np.testing.assert_array_equal(np.asarray(Fb[b]), np.asarray(F1))
+            np.testing.assert_array_equal(np.asarray(orderb[b]), np.asarray(o1))
+            np.testing.assert_array_equal(np.asarray(okb[b]), np.asarray(k1))
+
+    def test_chol_panel_batched_matches_single(self):
+        from repro.kernels import ops
+
+        A = jnp.asarray(_spd_stack(3, 8))
+        Lb = ops.chol_panel_batched(A)
+        for b in range(3):
+            np.testing.assert_array_equal(
+                np.asarray(Lb[b]), np.asarray(ops.chol_panel(A[b]))
+            )
+
+    def test_trsm_batched_match_single(self):
+        from repro.kernels import ops
+
+        v, R, C = 8, 16, 24
+        U = jnp.asarray(
+            np.triu(RNG.standard_normal((3, v, v))) + 3 * np.eye(v), jnp.float32
+        )
+        B = jnp.asarray(RNG.standard_normal((3, R, v)), jnp.float32)
+        Xb = ops.trsm_right_upper_batched(B, U)
+        L = jnp.asarray(
+            np.tril(RNG.standard_normal((3, v, v)), -1) + np.eye(v), jnp.float32
+        )
+        C_ = jnp.asarray(RNG.standard_normal((3, v, C)), jnp.float32)
+        Yb = ops.trsm_left_lower_batched(L, C_)
+        for b in range(3):
+            np.testing.assert_array_equal(
+                np.asarray(Xb[b]), np.asarray(ops.trsm_right_upper(B[b], U[b]))
+            )
+            np.testing.assert_array_equal(
+                np.asarray(Yb[b]), np.asarray(ops.trsm_left_lower(L[b], C_[b]))
+            )
+
+    def test_schur_and_fused_batched_match_single(self):
+        from repro.kernels import ops
+
+        v, M, C = 8, 16, 24
+        A = jnp.asarray(RNG.standard_normal((3, M, C)), jnp.float32)
+        Lm = jnp.asarray(RNG.standard_normal((3, M, v)), jnp.float32)
+        Um = jnp.asarray(RNG.standard_normal((3, v, C)), jnp.float32)
+        Sb = ops.schur_update_batched(A, Lm, Um)
+        L00 = jnp.asarray(
+            np.tril(RNG.standard_normal((3, v, v)), -1) + np.eye(v), jnp.float32
+        )
+        R01 = jnp.asarray(RNG.standard_normal((3, v, C)), jnp.float32)
+        Ab, Ub = ops.fused_trsm_schur_batched(A, L00, R01, Lm)
+        for b in range(3):
+            np.testing.assert_array_equal(
+                np.asarray(Sb[b]), np.asarray(ops.schur_update(A[b], Lm[b], Um[b]))
+            )
+            A1, U1 = ops.fused_trsm_schur(A[b], L00[b], R01[b], Lm[b])
+            np.testing.assert_array_equal(np.asarray(Ab[b]), np.asarray(A1))
+            np.testing.assert_array_equal(np.asarray(Ub[b]), np.asarray(U1))
+
+
+class TestBatchedOracleParity:
+    """The tentpole parity sweep: batched vs vmapped vs looped, ref vs pallas."""
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_lu_batched_bit_identical_to_vmapped(self, backend):
+        A = jnp.asarray(_stack(5, 32))
+        Fb, rowsb = lu_masked_sequential_batched(A, v=8, backend=backend)
+        Fv, rowsv = jax.vmap(
+            lambda a: lu_masked_sequential(a, v=8, backend=backend)
+        )(A)
+        np.testing.assert_array_equal(np.asarray(Fb), np.asarray(Fv))
+        np.testing.assert_array_equal(np.asarray(rowsb), np.asarray(rowsv))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_lu_batched_matches_python_loop(self, backend):
+        A = jnp.asarray(_stack(4, 32))
+        Fb, rowsb = lu_masked_sequential_batched(A, v=8, backend=backend)
+        for b in range(4):
+            F1, r1 = lu_masked_sequential(A[b], v=8, backend=backend)
+            np.testing.assert_array_equal(np.asarray(rowsb[b]), np.asarray(r1))
+            np.testing.assert_allclose(
+                np.asarray(Fb[b]), np.asarray(F1), rtol=1e-5, atol=1e-5
+            )
+
+    def test_lu_pallas_batched_vs_ref_vmapped(self):
+        """Acceptance sweep: the pallas batch-grid path against the vmapped
+        ref path — identical pivot orders, allclose factors (the established
+        cross-backend parity standard: the trsm algorithms differ, so
+        cross-backend bit-identity is not defined)."""
+        for B, N, v in ((2, 16, 8), (4, 32, 8), (3, 64, 16)):
+            A = jnp.asarray(_stack(B, N))
+            Fp, rowsp = lu_masked_sequential_batched(A, v=v, backend="pallas")
+            Fr, rowsr = jax.vmap(
+                lambda a: lu_masked_sequential(a, v=v, backend="ref")
+            )(A)
+            np.testing.assert_array_equal(np.asarray(rowsp), np.asarray(rowsr))
+            np.testing.assert_allclose(
+                np.asarray(Fp), np.asarray(Fr), rtol=1e-4, atol=1e-4
+            )
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_chol_batched_bit_identical_to_vmapped(self, backend):
+        A = jnp.asarray(_spd_stack(4, 32))
+        Lb = chol_blocked_sequential_batched(A, v=8, backend=backend)
+        Lv = jax.vmap(
+            lambda a: chol_blocked_sequential(a, v=8, backend=backend)
+        )(A)
+        np.testing.assert_array_equal(np.asarray(Lb), np.asarray(Lv))
+
+
+class TestBatchedPlanAPI:
+    def test_plan_tuple_builds_batched_plan(self):
+        p = plan((4, 32), strategy="sequential", v=8)
+        assert p.B == 4 and p.N == 32 and p.config.B == 4
+
+    def test_execute_validates_batched_shape(self):
+        p = plan((4, 32), strategy="sequential", v=8)
+        with pytest.raises(ValueError, match="B=4"):
+            p.execute(_stack(1, 32)[0])
+        with pytest.raises(ValueError, match="B=4"):
+            p.execute(_stack(3, 32))
+
+    def test_factor_stack_roundtrip(self):
+        A = _stack(4, 32)
+        f = factor(A, SolverConfig(strategy="sequential", v=8))
+        assert f.batched and f.B == 4 and f.N == 32
+        rec = np.asarray(f.reconstruct())
+        assert np.abs(rec - A).max() < 1e-4
+        for rows in np.asarray(f.rows):
+            assert sorted(rows.tolist()) == list(range(32))
+
+    def test_batched_solve_and_dets(self):
+        A = _stack(3, 32)
+        f = factor(A, SolverConfig(strategy="sequential", v=8))
+        b = RNG.standard_normal((3, 32)).astype(np.float32)
+        x = np.asarray(f.solve(b))
+        assert np.abs(np.einsum("bij,bj->bi", A, x) - b).max() < 5e-3
+        bk = RNG.standard_normal((3, 32, 2)).astype(np.float32)
+        xk = np.asarray(f.solve(bk))
+        assert np.abs(np.einsum("bij,bjk->bik", A, xk) - bk).max() < 5e-3
+        s, ld = f.slogdet()
+        s_np, ld_np = np.linalg.slogdet(A.astype(np.float64))
+        np.testing.assert_array_equal(np.asarray(s), s_np.astype(np.float32))
+        np.testing.assert_allclose(np.asarray(ld), ld_np, rtol=1e-4)
+
+    def test_batched_solve_rejects_wrong_shapes(self):
+        f = factor(_stack(3, 32), SolverConfig(strategy="sequential", v=8))
+        with pytest.raises(ValueError, match="batched"):
+            f.solve(np.zeros(32, np.float32))
+        with pytest.raises(ValueError, match="batched"):
+            f.solve(np.zeros((2, 32), np.float32))
+
+    def test_batched_cholesky_roundtrip(self):
+        A = _spd_stack(3, 32)
+        f = factor(A, SolverConfig(strategy="sequential_chol", v=8))
+        assert f.batched and f.kind == "cholesky"
+        assert np.abs(np.asarray(f.reconstruct()) - A).max() < 1e-2
+        s, ld = f.slogdet()
+        _, ld_np = np.linalg.slogdet(A.astype(np.float64))
+        assert np.asarray(s).shape == (3,)
+        np.testing.assert_allclose(np.asarray(ld), ld_np, rtol=1e-3)
+
+    def test_distributed_strategies_reject_batched(self):
+        for strategy in ("conflux", "baseline2d", "cholesky25d"):
+            with pytest.raises(ValueError, match="batched"):
+                resolve(32, SolverConfig(strategy=strategy, B=4))
+
+    def test_auto_resolves_batched_to_sequential(self):
+        r = resolve(32, SolverConfig(strategy="auto", B=4))
+        assert r.strategy == "sequential" and r.B == 4
+
+
+class TestBatchedPlanCacheIsolation:
+    """Satellite: plan((B, N)) and plan(N) must never collide in the cache."""
+
+    def test_batched_and_single_plans_have_distinct_keys(self):
+        cfg = SolverConfig(strategy="sequential", v=8)
+        assert cfg.with_(B=4).cache_key(32) != cfg.cache_key(32)
+        assert cfg.with_(B=4).cache_key(32) != cfg.with_(B=8).cache_key(32)
+
+    def test_batched_and_single_plans_cached_separately(self):
+        clear_plan_cache()
+        p1 = plan(32, strategy="sequential", v=8)
+        p2 = plan((4, 32), strategy="sequential", v=8)
+        p3 = plan((8, 32), strategy="sequential", v=8)
+        assert p1 is not p2 and p2 is not p3
+        stats = plan_cache_stats()
+        assert stats["misses"] == 3 and stats["hits"] == 0
+        # repeat lookups are pure hits onto the same objects
+        assert plan((4, 32), strategy="sequential", v=8) is p2
+        assert plan(32, strategy="sequential", v=8) is p1
+        assert plan_cache_stats()["hits"] == 2
+
+    def test_eviction_counters_with_batched_plans(self):
+        clear_plan_cache()
+        prev = set_plan_cache_capacity(2)
+        try:
+            plan((2, 32), strategy="sequential", v=8)
+            plan((4, 32), strategy="sequential", v=8)
+            plan((8, 32), strategy="sequential", v=8)  # evicts the (2, 32) plan
+            stats = plan_cache_stats()
+            assert stats["evictions"] == 1 and stats["size"] == 2
+            plan((2, 32), strategy="sequential", v=8)  # rebuild = miss
+            assert plan_cache_stats()["misses"] == 4
+        finally:
+            set_plan_cache_capacity(prev)
+            clear_plan_cache()
+
+    def test_capacity_env_var_respected(self):
+        """REPRO_PLAN_CACHE_CAPACITY bounds batched plans like any other."""
+        import subprocess
+        import sys
+
+        code = (
+            "from repro.api import plan, plan_cache_stats\n"
+            "for B in (2, 4, 8):\n"
+            "    plan((B, 32), strategy='sequential', v=8)\n"
+            "s = plan_cache_stats()\n"
+            "assert s['capacity'] == 2 and s['size'] == 2 and s['evictions'] == 1, s\n"
+            "print('OK')\n"
+        )
+        env = dict(os.environ, REPRO_PLAN_CACHE_CAPACITY="2")
+        env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+        out = subprocess.run(
+            [sys.executable, "-c", code], env=env, capture_output=True, text=True
+        )
+        assert out.returncode == 0 and "OK" in out.stdout, out.stderr
+
+
+class TestEngineBatchSlots:
+    def _systems(self, k, n=32):
+        return [
+            (RNG.standard_normal((n, n)).astype(np.float32),
+             RNG.standard_normal(n).astype(np.float32))
+            for _ in range(k)
+        ]
+
+    def test_flush_systems_solves_all_in_submit_order(self):
+        eng = SolveEngine(32, SolverConfig(strategy="sequential", v=8))
+        systems = self._systems(5)
+        tickets = [eng.submit_system(A, b) for A, b in systems]
+        assert tickets == list(range(5))
+        xs = eng.flush_systems()
+        assert len(xs) == 5
+        for (A, b), x in zip(systems, xs):
+            assert np.abs(A @ x - b).max() < 5e-3
+
+    def test_power_of_two_slots_and_counters(self):
+        eng = SolveEngine(32, SolverConfig(strategy="sequential", v=8))
+        for A, b in self._systems(5):
+            eng.submit_system(A, b)
+        eng.flush_systems()
+        st = eng.stats()
+        assert st["batched_factorizations"] == 1
+        assert st["batched_systems"] == 5
+        assert st["batch_pad_systems"] == 3  # 5 -> slot 8
+        assert st["pending_systems"] == 0
+        assert st["batch_s_total"] > 0.0
+
+    def test_slot_reuse_hits_plan_cache(self):
+        clear_plan_cache()
+        eng = SolveEngine(32, SolverConfig(strategy="sequential", v=8))
+        for _ in range(2):
+            for A, b in self._systems(3):
+                eng.submit_system(A, b)
+            eng.flush_systems()
+        # 3 -> slot 4 both times: the second flush reuses the cached plan
+        bp = eng._batched_plan(4)
+        assert bp.execute_count == 2 and bp.trace_count == 1
+
+    def test_submit_system_validates_eagerly(self):
+        eng = SolveEngine(32, SolverConfig(strategy="sequential", v=8))
+        with pytest.raises(ValueError, match=r"\[N, N\] matrix"):
+            eng.submit_system(np.zeros((32, 16), np.float32), np.zeros(32))
+        with pytest.raises(ValueError, match=r"\[N\] RHS"):
+            eng.submit_system(np.zeros((32, 32), np.float32), np.zeros(16))
+        with pytest.raises(ValueError, match="real"):
+            eng.submit_system(np.zeros((32, 32), complex), np.zeros(32))
+        assert eng.stats()["pending_systems"] == 0  # nothing slipped in
+
+    def test_submit_validates_rhs_length_against_plan_n(self):
+        """Satellite: a wrong-length RHS fails at submit time with a clear
+        message, not at flush inside a batch of good requests."""
+        eng = SolveEngine(32, SolverConfig(strategy="sequential", v=8))
+        with pytest.raises(ValueError, match="N=32"):
+            eng.submit(np.zeros(16, np.float32))
+        with pytest.raises(ValueError, match="N=32"):
+            eng.submit_system(np.zeros((32, 32), np.float32),
+                              np.zeros(48, np.float32))
+
+    def test_empty_flush_is_noop(self):
+        eng = SolveEngine(32, SolverConfig(strategy="sequential", v=8))
+        assert eng.flush_systems() == []
+
+    def test_cholesky_engine_batches_spd_systems(self):
+        eng = SolveEngine(32, SolverConfig(strategy="sequential_chol", v=8))
+        spds = _spd_stack(3, 32)
+        bs = RNG.standard_normal((3, 32)).astype(np.float32)
+        for A, b in zip(spds, bs):
+            eng.submit_system(A, b)
+        xs = eng.flush_systems()
+        for A, b, x in zip(spds, bs, xs):
+            assert np.abs(A @ x - b).max() < 5e-3
+        assert eng._batched_plan(4).kind == "cholesky"

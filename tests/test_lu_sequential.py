@@ -12,7 +12,8 @@ from repro.core.lu.sequential import (
     reconstruct,
     unpack_factors,
 )
-from repro.core.solve import lu_solve, slogdet, solve
+from repro.api import SolverConfig, factor
+from repro.core.solve import lu_solve
 
 
 RNG = np.random.default_rng(0)
@@ -81,7 +82,7 @@ class TestMaskedLUP:
 class TestSolveAPI:
     def test_lu_solve(self):
         A, b = _rand(64), RNG.standard_normal(64).astype(np.float32)
-        x = np.asarray(solve(A, b, distributed=False))
+        x = np.asarray(factor(A, SolverConfig(strategy="sequential")).solve(b))
         assert np.abs(A @ x - b).max() < 5e-4
 
     def test_lu_solve_matrix_rhs(self):
@@ -92,7 +93,7 @@ class TestSolveAPI:
 
     def test_slogdet_matches_numpy(self):
         A = _rand(48)
-        s, ld = slogdet(A, distributed=False)
+        s, ld = factor(A, SolverConfig(strategy="sequential")).slogdet()
         s_np, ld_np = np.linalg.slogdet(A.astype(np.float64))
         assert float(s) == pytest.approx(s_np)
         assert float(ld) == pytest.approx(ld_np, rel=1e-3)

@@ -231,22 +231,7 @@ class TestValidation:
             resolve(64, SolverConfig(strategy="sequential", v=24))
 
 
-class TestLegacyShims:
-    def test_lu_factor_forwards_v_to_the_plan(self):
-        """Regression: lu_factor(A, v=8) must key/run the plan with v=8."""
-        import warnings
-
-        from repro.core.solve import lu_factor
-
-        clear_plan_cache()
-        N = 64
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            lu_factor(_rand(N), v=8, distributed=False)
-        p = plan(N, SolverConfig(strategy="sequential", v=8))
-        assert plan_cache_stats()["hits"] == 1  # shim built exactly this key
-        assert p.config.v == 8 and p.trace_count == 1
-
+class TestResolutionGuards:
     def test_auto_with_oversized_grid_raises(self):
         import jax
 
@@ -274,21 +259,21 @@ class TestDtypeHandling:
         with pytest.raises(ValueError, match="complex"):
             SolverConfig(dtype="complex64")
 
-    def test_conflux_shim_normalizes_integer_matrix(self):
-        """Before: conflux_lu(int matrix) forwarded dtype='int64' into
-        SolverConfig and crashed with a tracer TypeError."""
-        from repro.core.lu.conflux import conflux_lu
-
+    def test_factor_normalizes_integer_matrix(self):
+        """An int matrix computes in the default float dtype — an integer
+        dtype would otherwise crash deep in tracing with a carry-type
+        TypeError (factor() only forwards *float* input dtypes)."""
         A = RNG.integers(-4, 5, (32, 32))
-        fact = conflux_lu(A, grid=GridConfig(Px=1, Py=1, c=1, v=8, N=32))
+        fact = factor(
+            A, SolverConfig(strategy="conflux",
+                            grid=GridConfig(Px=1, Py=1, c=1, v=8, N=32))
+        )
         assert fact.dtype == np.float32
         assert np.abs(np.asarray(fact.reconstruct()) - A).max() < 1e-4
 
-    def test_scalapack_shim_normalizes_bool_matrix(self):
-        from repro.core.lu.baseline2d import scalapack2d_lu
-
+    def test_factor_normalizes_bool_matrix(self):
         A = np.eye(32, dtype=bool)
-        fact = scalapack2d_lu(A, P_target=1, v=8)
+        fact = factor(A, SolverConfig(strategy="baseline2d", P_target=1, v=8))
         assert fact.dtype == np.float32
 
     def test_solve_warns_on_rhs_downcast(self):
