@@ -17,14 +17,17 @@ freshly measured hotloop windowed/flat wall-time ratios are compared
 against the *committed* smoke baseline's and the run fails when any row
 regresses past ``SMOKE_GATE_TOLERANCE`` (2x; ratios rather than absolute
 times so the shared CI container's load swings cancel — the in-run flat
-body is the control).  The gate also covers the schema-v5 ``batched`` rows
-(batched-vs-Python-loop throughput per backend): those regress when the
-loop/batched ratio *drops* past tolerance.  ``--validate`` checks the
-full-run JSON (``--validate --smoke`` the smoke one) against schema v5 —
-including the acceptance floor that the ref B=128, N=32 batched execute
-beats a Python loop of single executes by >= 3x — and exits non-zero on
-violations; CI runs smoke (with the gate) + validate and uploads the
-artifact.
+body is the control).  The gate also covers the ``batched`` rows
+(batched-vs-Python-loop throughput per backend) and the schema-v6
+``serving`` section (async-vs-sync serving throughput and batch-fill from
+``benchmarks.serve_load``): those regress when their ratio *drops* past
+tolerance.  ``--validate`` checks the full-run JSON (``--validate
+--smoke`` the smoke one) against schema v6 — including the acceptance
+floors that the ref B=128, N=32 batched execute beats a Python loop of
+single executes by >= 3x and that the async serving tier beats the
+per-request sync baseline by >= 2x at saturating load — and exits
+non-zero on violations; CI runs smoke (with the gates) + validate and
+uploads the artifact.
 """
 
 from __future__ import annotations
@@ -38,7 +41,9 @@ _ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 BENCH_JSON = os.path.join(_ROOT, "BENCH_lu.json")
 BENCH_SMOKE_JSON = os.path.join(_ROOT, "BENCH_lu.smoke.json")
 
-SCHEMA = "BENCH_lu.v5"
+from benchmarks.serve_load import SERVING_MIN_SPEEDUP
+
+SCHEMA = "BENCH_lu.v6"
 _MEASURED_KEYS = {
     "strategy", "backend", "N", "grid", "wall_us_per_call", "reconstruction_err",
     "solve_err", "comm_per_proc_elements", "model_per_proc_elements",
@@ -55,6 +60,9 @@ _BATCHED_KEYS = {"B", "N", "backend", "dtype", "batched_us", "loop_us",
 # The batched ref row must beat a Python loop of single-system executes by at
 # least this factor (acceptance floor at B=128, N=32, f32).
 BATCHED_MIN_SPEEDUP = 3.0
+_SERVING_ROW_KEYS = {"engine", "tenants", "requests", "wall_s",
+                     "throughput_rps", "p50_ms", "p95_ms", "p99_ms",
+                     "batch_fill", "shed_rate", "spill_rate"}
 _CACHE_KEYS = {"hits", "misses", "evictions", "size", "capacity"}
 
 # Perf-regression gate: a freshly measured windowed/flat hotloop ratio may
@@ -170,10 +178,92 @@ def validate_bench(path: str = BENCH_JSON, mode: str = "full") -> list[str]:
             )
         if not seen_ref_accept:
             errors.append("batched must carry the ref B=128 N=32 acceptance row")
+    serving = bench.get("serving")
+    if measured and serving is None:
+        errors.append("missing section: serving (sync-vs-async load rows "
+                      "from benchmarks.serve_load)")
+    elif serving is not None:
+        errors.extend(validate_serving(serving, mode=mode))
     cache = bench.get("plan_cache")
     if not isinstance(cache, dict) or not _CACHE_KEYS <= set(cache):
         errors.append(f"plan_cache must carry {sorted(_CACHE_KEYS)}, got {cache}")
     return errors
+
+
+def validate_serving(serving, mode: str = "full") -> list[str]:
+    """Schema check for the v6 `serving` section (shared with serve_load)."""
+    errors: list[str] = []
+    if not isinstance(serving, dict):
+        return [f"serving must be a dict section, got {type(serving).__name__}"]
+    rows = serving.get("rows")
+    if not isinstance(rows, list) or not rows:
+        return ["serving.rows must be a non-empty list of records"]
+    engines = set()
+    for i, row in enumerate(rows):
+        missing = _SERVING_ROW_KEYS - set(row)
+        if missing:
+            errors.append(f"serving.rows[{i}] missing keys: {sorted(missing)}")
+        engines.add(row.get("engine"))
+    if not {"sync", "async"} <= engines:
+        errors.append(f"serving.rows must cover both the 'sync' and 'async' "
+                      f"disciplines, saw {sorted(map(str, engines))}")
+    ratio = serving.get("async_over_sync")
+    if not isinstance(ratio, (int, float)):
+        errors.append(f"serving.async_over_sync must be a number, got {ratio!r}")
+    elif mode == "full" and not ratio >= SERVING_MIN_SPEEDUP:
+        errors.append(
+            f"serving: deadline-batched async throughput must beat the "
+            f"per-request sync baseline by >= {SERVING_MIN_SPEEDUP:.1f}x at "
+            f"saturating load, got {ratio:.2f}x"
+        )
+    for i, row in enumerate(rows):
+        if row.get("engine") == "async" and isinstance(row.get("batch_fill"), float):
+            if not 0.0 < row["batch_fill"] <= 1.0:
+                errors.append(
+                    f"serving.rows[{i}]: async batch_fill must be in (0, 1], "
+                    f"got {row['batch_fill']}"
+                )
+    return errors
+
+
+def serving_gate(bench: dict, baseline: dict | None,
+                 tol: float = SMOKE_GATE_TOLERANCE) -> tuple[list[str], int]:
+    """Gate the fresh serving section against the committed baseline's.
+
+    Two ratios, both of two same-process measurements (load swings cancel):
+    async/sync throughput must not *drop* below baseline/tol, and the async
+    batch-fill ratio must not drop below baseline/tol (a fill collapse means
+    the deadline trigger is firing on near-empty batches — the batching win
+    is gone even if throughput noise hides it).  No baseline serving rows ->
+    gates nothing; callers report compared == 0 as "gate did not run".
+    """
+    fresh = bench.get("serving") or {}
+    base = (baseline or {}).get("serving") or {}
+    regressions, compared = [], 0
+    fr, br = fresh.get("async_over_sync"), base.get("async_over_sync")
+    if isinstance(fr, (int, float)) and isinstance(br, (int, float)):
+        compared += 1
+        if fr < br / tol:
+            regressions.append(
+                f"serving: async/sync throughput ratio {fr:.2f} vs baseline "
+                f"{br:.2f} (< 1/{tol:.1f}x tolerance)"
+            )
+    def _async_fill(section):
+        for row in section.get("rows", []):
+            if isinstance(row, dict) and row.get("engine") == "async":
+                fill = row.get("batch_fill")
+                if isinstance(fill, (int, float)) and fill > 0:
+                    return fill
+        return None
+    ff, bf = _async_fill(fresh), _async_fill(base)
+    if ff is not None and bf is not None:
+        compared += 1
+        if ff < bf / tol:
+            regressions.append(
+                f"serving: async batch-fill {ff:.2f} vs baseline {bf:.2f} "
+                f"(< 1/{tol:.1f}x tolerance)"
+            )
+    return regressions, compared
 
 
 def smoke_gate(bench: dict, baseline: dict | None,
@@ -222,7 +312,8 @@ def smoke_gate(bench: dict, baseline: dict | None,
                 f"ratio {d['loop_over_batched']:.2f} vs baseline "
                 f"{ref['loop_over_batched']:.2f} (< 1/{tol:.1f}x tolerance)"
             )
-    return regressions, compared
+    sregs, scompared = serving_gate(bench, baseline, tol)
+    return regressions + sregs, compared + scompared
 
 
 def main() -> None:
@@ -275,6 +366,11 @@ def main() -> None:
         if measured:
             bench.update(measured)
 
+        _section("Serving load: per-request sync vs async deadline batching")
+        from benchmarks import serve_load
+
+        bench.update(serve_load.main(smoke=smoke))
+
     if not smoke:
         _section("Roofline table (from dry-run results, single pod)")
         from benchmarks import roofline_table
@@ -293,8 +389,8 @@ def main() -> None:
         if regressions:
             sys.exit(1)
         if compared:
-            print(f"# perf gate: {compared} hotloop windowed/flat ratios within "
-                  f"{SMOKE_GATE_TOLERANCE:.1f}x of the committed baseline")
+            print(f"# perf gate: {compared} hotloop/batched/serving ratios "
+                  f"within {SMOKE_GATE_TOLERANCE:.1f}x of the committed baseline")
         else:
             print("# perf gate: SKIPPED — no committed baseline hotloop rows "
                   "to compare against (commit BENCH_lu.smoke.json to arm it)")

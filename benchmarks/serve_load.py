@@ -1,0 +1,279 @@
+"""Closed-loop synthetic serving load: sync per-request baseline vs the
+async deadline-batched tier.
+
+    PYTHONPATH=src python -m benchmarks.serve_load [--smoke] [--validate]
+    PYTHONPATH=src python -m benchmarks.serve_load --tenants 16 --requests 40
+
+Spawns `tenants` closed-loop worker threads (each submits its next request
+the moment the previous one completes — offered concurrency == tenants,
+the standard saturating-load shape) over a mixed-size request stream
+(`--sizes`, ragged N bucketed by the engine into power-of-two slots), and
+measures two serving disciplines on identical request tensors:
+
+  sync   one `plan(n).execute(A)` + blocked solve per request in the
+         caller's thread — the per-request dispatch baseline every prior
+         PR's `SolveEngine` represented.
+  async  `AsyncSolveEngine.submit(...).result()` — futures coalesced by the
+         background executor into batched plan executions on a
+         size-or-deadline trigger.
+
+Phases alternate sync/async for `rounds` rounds (the shared container
+drifts through slow phases lasting whole seconds; alternating puts any
+phase on both sides of the ratio) and the best round per discipline is
+reported.  Client-side latency percentiles (p50/p95/p99 of submit->result)
+come from the same per-request timestamps for both disciplines; the async
+row additionally carries the engine's batch-fill ratio, shed/spill rates,
+queue-depth percentiles, and ragged-padding waste from `stats()`.
+
+The result merges into ``BENCH_lu.json`` (``BENCH_lu.smoke.json`` with
+``--smoke``) as the schema-v6 ``serving`` section.  ``--validate`` checks
+the section against the schema after the run; smoke runs additionally gate
+the async/sync throughput ratio and the batch-fill ratio against the
+committed smoke baseline (same tolerance story as the hotloop gate: ratios
+of two same-process measurements, so container load swings cancel).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import threading
+import time
+
+import numpy as np
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# Full-run acceptance floor: deadline-batched async throughput must beat the
+# per-request synchronous baseline by at least this factor at saturating
+# load (enforced by `benchmarks.run --validate` on the tracked full json).
+SERVING_MIN_SPEEDUP = 2.0
+
+# Defaults chosen from the container measurements: a closed loop can only
+# keep `tenants` requests in flight, so max_batch ~ tenants/2 keeps the
+# batch-fill ratio near 1.0 instead of stalling on the deadline every cycle.
+FULL = dict(tenants=16, requests=40, max_batch=16, max_delay_ms=2.0,
+            sizes=(24, 32), rounds=3)
+SMOKE = dict(tenants=8, requests=12, max_batch=8, max_delay_ms=2.0,
+             sizes=(24, 32), rounds=2)
+
+
+def _make_requests(tenants: int, requests: int, sizes) -> list[list[tuple]]:
+    """Per-tenant request streams: diagonally dominant mixed-size systems
+    (well-conditioned, so residual checks stay tight at f32)."""
+    streams = []
+    for t in range(tenants):
+        rng = np.random.default_rng(1000 + t)
+        stream = []
+        for i in range(requests):
+            n = sizes[(t + i) % len(sizes)]
+            A = rng.standard_normal((n, n)).astype(np.float32)
+            A += n * np.eye(n, dtype=np.float32)
+            b = rng.standard_normal(n).astype(np.float32)
+            stream.append((A, b))
+        streams.append(stream)
+    return streams
+
+
+def _percentiles(lats_ms: list[float]) -> dict:
+    arr = np.sort(np.asarray(lats_ms, dtype=np.float64))
+    def pct(q):
+        return float(arr[max(0, min(len(arr) - 1, -(-q * len(arr) // 100) - 1))])
+    return {"p50_ms": pct(50), "p95_ms": pct(95), "p99_ms": pct(99)}
+
+
+def _closed_loop(streams, do_request) -> tuple[float, list[float]]:
+    """Run every tenant stream concurrently; returns (wall_s, latencies_ms).
+
+    Each worker is a closed loop: it issues its next request as soon as the
+    previous completes, and every request is individually timed
+    client-side.  A worker exception aborts the run (the bench must fail
+    loudly, not report throughput over silently dropped requests).
+    """
+    lat_lists: list[list[float]] = [[] for _ in streams]
+    errors: list[BaseException] = []
+
+    def worker(t: int):
+        try:
+            out = lat_lists[t]
+            for A, b in streams[t]:
+                t0 = time.perf_counter()
+                do_request(t, A, b)
+                out.append((time.perf_counter() - t0) * 1e3)
+        except BaseException as exc:  # noqa: BLE001
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(t,), daemon=True)
+               for t in range(len(streams))]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    wall = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    return wall, [v for lst in lat_lists for v in lst]
+
+
+def run_load(tenants: int, requests: int, max_batch: int, max_delay_ms: float,
+             sizes, rounds: int, check: bool = True) -> dict:
+    """Measure both disciplines; returns the schema-v6 `serving` section."""
+    import jax
+
+    from repro.api import SolverConfig, plan
+    from repro.serving import AsyncSolveEngine
+
+    cfg = SolverConfig(strategy="sequential", v=8)
+    N = max(sizes)
+    streams = _make_requests(tenants, requests, sizes)
+    total = tenants * requests
+
+    # -- sync discipline: per-request plan execute + blocked solve ----------
+    def sync_request(t, A, b):
+        fact = plan(A.shape[0], cfg).execute(A)
+        x = np.asarray(jax.block_until_ready(fact.solve(b)))
+        if check and abs(float(np.abs(A @ x - b).max())) > 5e-2:
+            raise AssertionError("sync solve residual blew up")
+
+    for n in sorted(set(sizes)):  # warm the per-size plans outside the timer
+        fact = plan(n, cfg).execute(np.eye(n, dtype=np.float32))
+        jax.block_until_ready(fact.solve(np.zeros(n, np.float32)))
+
+    # -- async discipline: futures through the deadline-batched tier --------
+    eng = AsyncSolveEngine(N, cfg, max_batch=max_batch,
+                           max_delay_ms=max_delay_ms,
+                           max_queue=max(4 * tenants, 64))
+
+    def async_request(t, A, b):
+        x = eng.submit(A, b, tenant=f"tenant-{t}").result(timeout=300)
+        if check and abs(float(np.abs(A @ x - b).max())) > 5e-2:
+            raise AssertionError("async solve residual blew up")
+
+    # warm round (untimed): compiles the batched slot plans, including the
+    # partial-batch power-of-two slots the drain pattern produces
+    warm = _make_requests(tenants, max(2, max_batch // 2), sizes)
+    _closed_loop(warm, async_request)
+
+    best = {}
+    for rnd in range(rounds):  # interleaved: container drift lands on both
+        for name, fn in (("sync", sync_request), ("async", async_request)):
+            wall, lats = _closed_loop(streams, fn)
+            rps = total / wall
+            if name not in best or rps > best[name]["throughput_rps"]:
+                best[name] = {"wall_s": wall, "throughput_rps": rps,
+                              "lats": lats}
+        print(f"# round {rnd}: sync {best['sync']['throughput_rps']:.0f} rps "
+              f"(best so far), async {best['async']['throughput_rps']:.0f} rps")
+
+    st = eng.stats()
+    a = st["async"]
+    eng.close()
+
+    rows = []
+    for name in ("sync", "async"):
+        b = best[name]
+        row = {
+            "engine": name, "tenants": tenants, "requests": total,
+            "wall_s": round(b["wall_s"], 4),
+            "throughput_rps": round(b["throughput_rps"], 1),
+            **{k: round(v, 3) for k, v in _percentiles(b["lats"]).items()},
+            "batch_fill": round(a["batch_fill"], 4) if name == "async" else 0.0,
+            "shed_rate": a["shed_rate"] if name == "async" else 0.0,
+            "spill_rate": a["spill_rate"] if name == "async" else 0.0,
+        }
+        if name == "async":
+            row["queue_depth_p95"] = a["queue_depth"]["p95"]
+            row["batch_pad_waste"] = st["batch_pad_waste"]
+            row["flushes"] = a["flushes"]
+        rows.append(row)
+
+    ratio = best["async"]["throughput_rps"] / best["sync"]["throughput_rps"]
+    serving = {
+        "tenants": tenants, "requests_per_tenant": requests,
+        "sizes": list(sizes), "max_batch": max_batch,
+        "max_delay_ms": max_delay_ms, "rounds": rounds,
+        "strategy": cfg.strategy, "backend": cfg.backend, "dtype": cfg.dtype,
+        "rows": rows,
+        "async_over_sync": round(ratio, 3),
+    }
+    for row in rows:
+        print(f"# serving {row['engine']}: {row['throughput_rps']:.0f} rps, "
+              f"p50 {row['p50_ms']:.2f}ms p99 {row['p99_ms']:.2f}ms"
+              + (f", fill {row['batch_fill']:.2f}" if row["engine"] == "async"
+                 else ""))
+    print(f"# serving async/sync throughput = {ratio:.2f}x "
+          f"(full-run floor: {SERVING_MIN_SPEEDUP:.1f}x)")
+    return serving
+
+
+def main(smoke: bool = False, **overrides) -> dict:
+    """Run the load generator; returns {"serving": <section>} for run.py."""
+    params = dict(SMOKE if smoke else FULL)
+    params.update({k: v for k, v in overrides.items() if v is not None})
+    return {"serving": run_load(**params)}
+
+
+def _merge_and_gate(serving: dict, smoke: bool, validate: bool) -> int:
+    """Merge the fresh serving section into the bench json (bumping the
+    schema tag), optionally validate it, and gate smoke runs against the
+    committed baseline.  Returns a process exit code."""
+    from benchmarks import run as bench_run
+
+    path = bench_run.BENCH_SMOKE_JSON if smoke else bench_run.BENCH_JSON
+    baseline = None
+    if os.path.exists(path):
+        with open(path) as f:
+            baseline = json.load(f)
+    bench = dict(baseline or {"mode": "smoke" if smoke else "full"})
+    bench["schema"] = bench_run.SCHEMA
+    bench["serving"] = serving
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=1, default=str)
+    print(f"# merged serving section into {path}")
+
+    code = 0
+    if validate:
+        errors = bench_run.validate_serving(serving,
+                                            mode="smoke" if smoke else "full")
+        for e in errors:
+            print(f"SCHEMA-ERROR: {e}")
+        if errors:
+            code = 1
+        else:
+            print(f"# serving section conforms to {bench_run.SCHEMA}")
+    if smoke:
+        regressions, compared = bench_run.serving_gate(bench, baseline)
+        for r in regressions:
+            print(f"PERF-REGRESSION: {r}")
+        if regressions:
+            code = 1
+        elif compared:
+            print(f"# serving gate: {compared} ratios within "
+                  f"{bench_run.SMOKE_GATE_TOLERANCE:.1f}x of the committed "
+                  f"baseline")
+        else:
+            print("# serving gate: SKIPPED — no committed baseline serving "
+                  "rows (commit BENCH_lu.smoke.json to arm it)")
+    return code
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run targeting BENCH_lu.smoke.json")
+    ap.add_argument("--validate", action="store_true",
+                    help="validate the serving section after the run")
+    ap.add_argument("--tenants", type=int)
+    ap.add_argument("--requests", type=int, help="requests per tenant")
+    ap.add_argument("--max-batch", dest="max_batch", type=int)
+    ap.add_argument("--max-delay-ms", dest="max_delay_ms", type=float)
+    ap.add_argument("--rounds", type=int)
+    args = ap.parse_args()
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    result = main(smoke=args.smoke, tenants=args.tenants,
+                  requests=args.requests, max_batch=args.max_batch,
+                  max_delay_ms=args.max_delay_ms, rounds=args.rounds)
+    sys.exit(_merge_and_gate(result["serving"], args.smoke, args.validate))

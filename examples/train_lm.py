@@ -17,7 +17,7 @@ from repro.configs import get_config, reduced
 from repro.data.pipeline import DataConfig, synthetic_batch
 from repro.models.model_zoo import build_model
 from repro.runtime.loop import RunConfig, run_training
-from repro.serving.engine import SamplerConfig, ServeEngine
+from repro.serving import SamplerConfig, ServeEngine
 from repro.training.optimizer import OptConfig
 
 

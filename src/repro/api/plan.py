@@ -54,11 +54,17 @@ class FactorizationPlan:
         self.hotloop: dict = {}  # per-primitive timings; see profile_hotloop
         self.trace_count = 0
         self.execute_count = 0
+        # Cached plans are shared across threads (SolveEngine callers, the
+        # async tier's executor), so the counter bumps are locked: a bare
+        # `+= 1` is a read-modify-write that can drop increments under
+        # concurrent executes and skew the re-trace accounting.
+        self._count_lock = threading.Lock()
         self._run = run  # (A: np.ndarray [N, N]) -> (F, rows); set by the builder
 
     def _note_trace(self):
         """Called from inside the traced program: fires once per compile."""
-        self.trace_count += 1
+        with self._count_lock:
+            self.trace_count += 1
 
     def profile_hotloop(self, repeats: int = 3) -> dict:
         """Measure per-primitive hot-loop wall times on this plan's shapes.
@@ -101,7 +107,8 @@ class FactorizationPlan:
                 f"got A of shape {A.shape}"
             )
         F, rows = self._run(A)
-        self.execute_count += 1
+        with self._count_lock:
+            self.execute_count += 1
         return Factorization(
             F=F, rows=rows, grid=self.grid, comm=dict(self.comm),
             strategy=self.config.strategy, backend=self.config.backend,

@@ -16,7 +16,7 @@ from repro.checkpoint import Checkpointer
 from repro.configs import get_config, reduced
 from repro.data.pipeline import DataConfig, synthetic_batch
 from repro.models.model_zoo import build_model
-from repro.serving.engine import SamplerConfig, ServeEngine
+from repro.serving import SamplerConfig, ServeEngine
 from repro.training.optimizer import OptConfig
 from repro.training.train_step import init_train_state
 

@@ -1,6 +1,38 @@
-"""Serving: static-batch LM engine + plan-cached linear-algebra solves."""
+"""Serving tier — the single public import surface.
 
-from repro.serving.engine import ServeEngine, SamplerConfig
+Linear algebra:
+    `SolveEngine`       — thread-safe batched solves on cached plans
+                          (multi-RHS flush + ragged-N batch slots).
+    `AsyncSolveEngine`  — futures, size-or-deadline batching, weighted-fair
+                          multi-tenant queues with shed/spill backpressure.
+    `Overloaded`        — raised by `submit` under the "shed" policy.
+
+LM:
+    `ServeEngine`, `SamplerConfig` — static-batch prefill/decode engine
+    (moved from `repro.serving.engine` to `repro.serving.lm_engine`).
+"""
+
+from repro.serving.async_engine import AsyncSolveEngine
+from repro.serving.lm_engine import SamplerConfig, ServeEngine
+from repro.serving.metrics import Ring
+from repro.serving.queues import Overloaded, TenantQueues
 from repro.serving.solve_engine import SolveEngine
 
-__all__ = ["ServeEngine", "SamplerConfig", "SolveEngine"]
+__all__ = [
+    "AsyncSolveEngine",
+    "Overloaded",
+    "Ring",
+    "SamplerConfig",
+    "ServeEngine",
+    "SolveEngine",
+    "TenantQueues",
+]
+
+
+def __getattr__(name: str):
+    # Removed internals fail loudly with a pointer, never silently.
+    raise AttributeError(
+        f"module 'repro.serving' has no attribute {name!r}; the public "
+        f"surface is {__all__} (the old repro.serving.engine module moved "
+        f"to repro.serving.lm_engine)"
+    )

@@ -1,73 +1,16 @@
-"""Static-batch serving engine: batched prefill, lockstep decode, greedy or
-temperature sampling, EOS / max-token stopping.
+"""Removed module — `repro.serving.engine` became `repro.serving.lm_engine`.
 
-The decode path is the same jitted `decode_step` the dry-run lowers at
-decode_32k / long_500k scale; here it runs at example scale on CPU.
+The serving package was reorganized around the async linear-algebra tier
+(PR 7): `solve_engine` (batched SolveEngine), `async_engine`
+(AsyncSolveEngine: futures + deadline batching + backpressure), `queues`,
+`metrics`, and `lm_engine` (the static-batch LM ServeEngine that used to
+live here).  Import from the package surface instead:
+
+    from repro.serving import ServeEngine, SamplerConfig
 """
 
-from __future__ import annotations
-
-from dataclasses import dataclass
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-
-@dataclass(frozen=True)
-class SamplerConfig:
-    temperature: float = 0.0  # 0 => greedy
-    eos_id: int | None = None
-    max_new_tokens: int = 32
-    seed: int = 0
-
-
-class ServeEngine:
-    def __init__(self, model, params, max_len: int, batch_size: int,
-                 sampler: SamplerConfig = SamplerConfig()):
-        self.model = model
-        self.params = params
-        self.max_len = max_len
-        self.batch_size = batch_size
-        self.sampler = sampler
-        self._decode = jax.jit(model.decode_step)
-        self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, max_len=max_len)
-        )
-
-    def generate(self, prompts: list[list[int]]) -> list[list[int]]:
-        """Generate completions for up to batch_size same-length prompts."""
-        assert len(prompts) <= self.batch_size
-        plen = len(prompts[0])
-        assert all(len(p) == plen for p in prompts), "static engine: equal prompt lengths"
-        B = len(prompts)
-        toks = jnp.asarray(np.array(prompts, np.int32))
-        logits, caches = self._prefill(self.params, {"tokens": toks})
-        out = [[] for _ in range(B)]
-        done = np.zeros(B, bool)
-        key = jax.random.key(self.sampler.seed)
-        position = plen
-        next_tok = self._sample(logits, key)
-        for i in range(B):
-            out[i].append(int(next_tok[i]))
-        for t in range(1, self.sampler.max_new_tokens):
-            if position >= self.max_len or done.all():
-                break
-            logits, caches = self._decode(self.params, caches, next_tok, jnp.int32(position))
-            key = jax.random.fold_in(key, t)
-            next_tok = self._sample(logits, key)
-            position += 1
-            for i in range(B):
-                if done[i]:
-                    continue
-                tok = int(next_tok[i])
-                if self.sampler.eos_id is not None and tok == self.sampler.eos_id:
-                    done[i] = True
-                else:
-                    out[i].append(tok)
-        return out
-
-    def _sample(self, logits, key):
-        if self.sampler.temperature <= 0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(key, logits / self.sampler.temperature).astype(jnp.int32)
+raise ImportError(
+    "repro.serving.engine was folded into the serving package layout: "
+    "import ServeEngine and SamplerConfig from repro.serving (the class "
+    "now lives in repro.serving.lm_engine)"
+)

@@ -361,3 +361,77 @@ class TestEngineBatchSlots:
         for A, b, x in zip(spds, bs, xs):
             assert np.abs(A @ x - b).max() < 5e-3
         assert eng._batched_plan(4).kind == "cholesky"
+
+
+class TestRaggedBatchSlots:
+    """Ragged-N batching: mixed-size submit_system requests bucket into
+    power-of-two N slots (identity-tail padding is exact — pivoting never
+    crosses the block-diagonal boundary) and stats() reports the padding
+    waste."""
+
+    def _sys(self, n):
+        A = RNG.standard_normal((n, n)).astype(np.float32)
+        A += n * np.eye(n, dtype=np.float32)
+        b = RNG.standard_normal(n).astype(np.float32)
+        return A, b
+
+    def test_mixed_sizes_solve_exactly(self):
+        eng = SolveEngine(32, SolverConfig(strategy="sequential", v=8))
+        systems = [self._sys(n) for n in (5, 8, 12, 17, 24, 32)]
+        tickets = [eng.submit_system(A, b) for A, b in systems]
+        xs = eng.flush_systems()
+        for (A, b), t in zip(systems, tickets):
+            x = xs[t]
+            assert x.shape == (A.shape[0],)  # trimmed to the real n
+            # identity-tail padding is exact, so the padded solve must agree
+            # with the dense direct solve to f32 roundoff, not just residual
+            ref = np.linalg.solve(A.astype(np.float64), b.astype(np.float64))
+            assert np.abs(x - ref).max() < 5e-4
+
+    def test_slot_assignment_and_bucket_counters(self):
+        eng = SolveEngine(32, SolverConfig(strategy="sequential", v=8))
+        # n=5 -> slot 8 (MIN_N_SLOT), 12 -> 16, 12 -> 16, 32 -> 32 (exact)
+        for n in (5, 12, 12, 32):
+            eng.submit_system(*self._sys(n))
+        assert [p.slotN for p in eng._pending_systems] == [8, 16, 16, 32]
+        eng.flush_systems()
+        st = eng.stats()
+        assert st["batched_factorizations"] == 3  # one per distinct slot
+        assert st["batched_systems"] == 4
+        assert st["batch_pad_systems"] == 0  # 1, 2, 1 are power-of-two fills
+        assert st["batch_pad_waste"] > 0.0  # ragged identity tails
+
+    def test_exact_size_full_batch_has_zero_waste(self):
+        eng = SolveEngine(32, SolverConfig(strategy="sequential", v=8))
+        assert eng.stats()["batch_pad_waste"] == 0.0  # no batched work yet
+        for _ in range(4):
+            eng.submit_system(*self._sys(32))
+        eng.flush_systems()
+        assert eng.stats()["batch_pad_waste"] == 0.0  # 4 -> slotB 4, no pad
+
+    def test_slot_respects_panel_width_floor(self):
+        eng = SolveEngine(64, SolverConfig(strategy="sequential", v=16))
+        # next_pow2(5)=8 < panel width 16: the slot must hold a full panel
+        assert eng._prepare_system(*self._sys(5)).slotN == 16
+
+    def test_ragged_buckets_reuse_cached_plans(self):
+        clear_plan_cache()
+        eng = SolveEngine(32, SolverConfig(strategy="sequential", v=8))
+        for _ in range(2):
+            eng.submit_system(*self._sys(12))
+            eng.flush_systems()
+        bp = eng._batched_plan(1, 16)  # slotB=1, slotN=16 both rounds
+        assert bp.execute_count == 2 and bp.trace_count == 1
+
+    def test_oversize_system_rejected(self):
+        eng = SolveEngine(32, SolverConfig(strategy="sequential", v=8))
+        with pytest.raises(ValueError, match="N <= 32"):
+            eng.submit_system(*self._sys(48))
+
+    def test_ragged_cholesky_spd_tail_stays_spd(self):
+        eng = SolveEngine(32, SolverConfig(strategy="sequential_chol", v=8))
+        spd = _spd_stack(1, 12)[0]
+        b = RNG.standard_normal(12).astype(np.float32)
+        t = eng.submit_system(spd, b)
+        x = eng.flush_systems()[t]
+        assert np.abs(spd @ x - b).max() < 5e-3

@@ -1,0 +1,429 @@
+"""Async serving tier: futures, deadline batching, fairness, backpressure.
+
+Deadline behavior is tested with a fake clock and `pump()` (the executor's
+step function) so CI never sleeps or races a real timer; one end-to-end
+class exercises the real background thread with generous timeouts.
+Also: the SolveEngine concurrent-access regression tests (two threads
+through one engine must produce correct solves and consistent counters)
+and the schema-v6 serving validator/gate.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import SolverConfig, plan
+from repro.serving import AsyncSolveEngine, Overloaded, Ring, SolveEngine
+from repro.serving.queues import TenantQueues
+
+RNG = np.random.default_rng(7)
+
+
+def _sys(n, rng=RNG):
+    """A well-conditioned (diagonally dominant) n x n system."""
+    A = rng.standard_normal((n, n)).astype(np.float32)
+    A += n * np.eye(n, dtype=np.float32)
+    b = rng.standard_normal(n).astype(np.float32)
+    return A, b
+
+
+def _residual(A, b, x):
+    return float(np.abs(A @ x[: A.shape[0]] - b).max())
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _fake_engine(**kw):
+    clock = FakeClock()
+    defaults = dict(strategy="sequential", v=8, start=False, clock=clock)
+    defaults.update(kw)
+    return AsyncSolveEngine(32, **defaults), clock
+
+
+class TestDeadlineTrigger:
+    def test_below_batch_waits_for_deadline_then_flushes(self):
+        eng, clock = _fake_engine(max_batch=8, max_delay_ms=10.0)
+        A, b = _sys(32)
+        fut = eng.submit(A, b)
+        # trigger must NOT fire before max_delay_ms has elapsed
+        assert eng.pump(now=0.0) == 0
+        assert eng.pump(now=0.0099) == 0
+        assert not fut.done()
+        # ... and MUST fire once the oldest request has waited max_delay_ms
+        clock.t = 0.0101
+        assert eng.pump() == 1
+        assert fut.done()
+        assert _residual(A, b, fut.result()) < 5e-3
+
+    def test_full_batch_flushes_without_waiting(self):
+        eng, _ = _fake_engine(max_batch=4, max_delay_ms=1e6)
+        reqs = [_sys(32) for _ in range(4)]
+        futs = [eng.submit(A, b) for A, b in reqs]
+        # deadline is an hour away; the size trigger fires immediately
+        assert eng.pump(now=0.0) == 4
+        for (A, b), f in zip(reqs, futs):
+            assert _residual(A, b, f.result()) < 5e-3
+
+    def test_trigger_wait_tracks_oldest_request(self):
+        eng, clock = _fake_engine(max_batch=8, max_delay_ms=10.0)
+        eng.submit(*_sys(32))
+        clock.t = 0.004
+        eng.submit(*_sys(32))  # newer request must not extend the deadline
+        with eng._cv:
+            assert eng._trigger_wait_locked(0.004) == pytest.approx(0.006)
+        assert eng.pump(now=0.0099) == 0
+        assert eng.pump(now=0.0101) == 2
+
+    def test_served_batch_records_latency_and_fill(self):
+        eng, clock = _fake_engine(max_batch=4, max_delay_ms=10.0)
+        for _ in range(2):
+            eng.submit(*_sys(32))
+        clock.t = 0.02
+        assert eng.pump() == 2
+        st = eng.stats()["async"]
+        assert st["served"] == 2 and st["flushes"] == 1
+        assert st["batch_fill"] == pytest.approx(0.5)  # 2 of max_batch=4
+        lat = st["latency_ms"]
+        assert lat["count"] == 2
+        assert lat["p50"] == pytest.approx(20.0)  # waited the fake 20ms
+
+    def test_close_drains_pending_without_executor(self):
+        eng, _ = _fake_engine(max_batch=8, max_delay_ms=1e6)
+        A, b = _sys(24)
+        fut = eng.submit(A, b)
+        eng.close()  # start=False path: drains inline
+        assert _residual(A, b, fut.result()) < 5e-3
+        with pytest.raises(RuntimeError, match="closed"):
+            eng.submit(A, b)
+
+
+class TestRaggedThroughAsync:
+    def test_mixed_sizes_one_engine(self):
+        eng, clock = _fake_engine(max_batch=8, max_delay_ms=1.0)
+        reqs = [_sys(n) for n in (8, 12, 24, 32, 17)]
+        futs = [eng.submit(A, b) for A, b in reqs]
+        clock.t = 1.0
+        assert eng.pump() == 5
+        for (A, b), f in zip(reqs, futs):
+            x = f.result()
+            assert x.shape == (A.shape[0],)  # trimmed back to the real n
+            assert _residual(A, b, x) < 5e-3
+        assert eng.stats()["batch_pad_waste"] > 0.0
+
+    def test_oversize_request_rejected_eagerly(self):
+        eng, _ = _fake_engine()
+        with pytest.raises(ValueError, match="N <= 32"):
+            eng.submit(*_sys(48))
+        assert eng.stats()["async"]["pending"] == 0
+
+
+class TestBackpressure:
+    def test_shed_raises_overloaded_and_counts(self):
+        eng, _ = _fake_engine(max_queue=2, overload="shed")
+        eng.submit(*_sys(32), tenant="hot")
+        eng.submit(*_sys(32), tenant="hot")
+        with pytest.raises(Overloaded, match="hot"):
+            eng.submit(*_sys(32), tenant="hot")
+        st = eng.stats()["async"]
+        assert st["shed"] == 1 and st["spilled"] == 0
+        assert st["tenants"]["hot"]["shed"] == 1
+        assert st["shed_rate"] == pytest.approx(1 / 3)
+        # other tenants are unaffected by one tenant's full queue
+        f = eng.submit(*_sys(32), tenant="cold")
+        assert not f.done()
+
+    def test_spill_solves_inline_and_counts(self):
+        eng, _ = _fake_engine(max_queue=1, overload="spill")
+        eng.submit(*_sys(32), tenant="t")
+        A, b = _sys(24)
+        fut = eng.submit(A, b, tenant="t")  # over capacity -> inline solve
+        assert fut.done()  # completed synchronously, never queued
+        assert _residual(A, b, fut.result()) < 5e-3
+        st = eng.stats()["async"]
+        assert st["spilled"] == 1 and st["shed"] == 0
+        assert st["tenants"]["t"]["spilled"] == 1
+        assert st["spill_rate"] == pytest.approx(0.5)
+        assert st["pending"] == 1  # the queued request is still there
+
+    def test_queue_depth_is_bounded_under_spill(self):
+        eng, _ = _fake_engine(max_queue=3, overload="spill")
+        for _ in range(10):
+            eng.submit(*_sys(32), tenant="t")
+        st = eng.stats()["async"]
+        assert st["pending"] == 3
+        assert st["spilled"] == 7
+        assert st["queue_depth"]["max"] <= 3
+
+    def test_unknown_policy_rejected(self):
+        with pytest.raises(ValueError, match="overload policy"):
+            AsyncSolveEngine(32, strategy="sequential", v=8, start=False,
+                             overload="drop")
+
+
+class TestWeightedFairness:
+    def test_stride_drain_matches_weights(self):
+        eng, clock = _fake_engine(max_batch=6, max_delay_ms=1.0,
+                                  weights={"a": 2.0, "b": 1.0})
+        for _ in range(6):
+            eng.submit(*_sys(32), tenant="a")
+            eng.submit(*_sys(32), tenant="b")
+        clock.t = 1.0
+        assert eng.pump() == 6
+        st = eng.stats()["async"]["tenants"]
+        # weight-2 tenant gets ~2x the slots of the weight-1 tenant
+        assert st["a"]["served"] == 4 and st["b"]["served"] == 2
+        assert eng.pump() == 6  # the rest drains on the next cycle
+        st = eng.stats()["async"]["tenants"]
+        assert st["a"]["served"] == 6 and st["b"]["served"] == 6
+
+    def test_idle_tenant_banks_no_credit(self):
+        q = TenantQueues(max_queue=64, weights={"idle": 1.0, "busy": 1.0})
+
+        class R:
+            def __init__(self, tenant):
+                self.tenant = tenant
+                self.t_submit = 0.0
+
+        for _ in range(8):
+            q.push(R("busy"))
+        q.drain(8)  # busy's pass advances to 8
+        q.push(R("idle"))  # first activation: clamped to vtime, no backlog burst
+        q.push(R("busy"))
+        order = [r.tenant for r in q.drain(2)]
+        assert sorted(order) == ["busy", "idle"]  # alternates, not idle-first-x8
+
+
+class TestFutureExceptionPropagation:
+    def test_solver_failure_fails_every_future_in_batch(self, monkeypatch):
+        eng, clock = _fake_engine(max_batch=4, max_delay_ms=1.0)
+        futs = [eng.submit(*_sys(32)) for _ in range(3)]
+
+        def boom():
+            raise RuntimeError("solver exploded")
+
+        monkeypatch.setattr(eng.engine, "flush_systems", boom)
+        clock.t = 1.0
+        assert eng.pump() == 0  # nothing served
+        for f in futs:
+            assert isinstance(f.exception(), RuntimeError)
+            assert "solver exploded" in str(f.exception())
+        # the failed batch must not leave zombie systems that would shift
+        # the next batch's tickets
+        assert eng.engine.stats()["pending_systems"] == 0
+        assert eng.stats()["async"]["failed"] == 3
+        # the tier recovers: a fresh submit after the fault serves fine
+        monkeypatch.undo()
+        A, b = _sys(16)
+        f = eng.submit(A, b)
+        clock.t = 2.0
+        assert eng.pump() == 1
+        assert _residual(A, b, f.result()) < 5e-3
+
+
+class TestRealExecutor:
+    """End-to-end with the real background thread and real clock.  Timeouts
+    are generous (these assert completion, never timing)."""
+
+    def test_futures_complete_under_threaded_load(self):
+        eng = AsyncSolveEngine(32, strategy="sequential", v=8,
+                               max_batch=4, max_delay_ms=5.0)
+        try:
+            reqs = [_sys((16, 24, 32)[i % 3]) for i in range(12)]
+            futs = [eng.submit(A, b, tenant=f"t{i % 3}")
+                    for i, (A, b) in enumerate(reqs)]
+            for (A, b), f in zip(reqs, futs):
+                assert _residual(A, b, f.result(timeout=120)) < 5e-3
+            st = eng.stats()["async"]
+            assert st["served"] == 12
+            assert st["latency_ms"]["count"] == 12
+            assert st["flushes"] >= 3  # max_batch=4 forces several
+            assert st["pending"] == 0
+        finally:
+            eng.close()
+
+    def test_close_is_idempotent_and_rejects_new_work(self):
+        eng = AsyncSolveEngine(32, strategy="sequential", v=8)
+        eng.close()
+        eng.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            eng.submit(*_sys(32))
+
+    def test_context_manager_drains(self):
+        with AsyncSolveEngine(32, strategy="sequential", v=8,
+                              max_batch=64, max_delay_ms=1e5) as eng:
+            A, b = _sys(32)
+            fut = eng.submit(A, b)
+        # exit closes with drain=True even though no trigger ever fired
+        assert _residual(A, b, fut.result(timeout=0)) < 5e-3
+
+
+class TestConcurrentSolveEngine:
+    """Satellite regression: the engine's queues and counters are shared
+    state; before the engine lock, two submitters could race append/len into
+    duplicate tickets and tear the stats increments."""
+
+    def test_two_threads_submitting_systems(self):
+        eng = SolveEngine(16, SolverConfig(strategy="sequential", v=8))
+        k = 40
+        tickets = [[], []]
+        systems = [[], []]
+        barrier = threading.Barrier(2)
+
+        def worker(i):
+            rng = np.random.default_rng(100 + i)
+            barrier.wait()
+            for _ in range(k):
+                A, b = _sys(16, rng)
+                systems[i].append((A, b))
+                tickets[i].append(eng.submit_system(A, b))
+
+        threads = [threading.Thread(target=worker, args=(i,)) for i in (0, 1)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        # every request got a unique ticket covering 0..2k-1 exactly
+        assert sorted(tickets[0] + tickets[1]) == list(range(2 * k))
+        xs = eng.flush_systems()
+        assert len(xs) == 2 * k
+        for i in (0, 1):
+            for (A, b), t in zip(systems[i], tickets[i]):
+                assert _residual(A, b, xs[t]) < 5e-3
+        st = eng.stats()
+        assert st["batched_systems"] == 2 * k
+        assert st["pending_systems"] == 0
+
+    def test_concurrent_submit_and_flush_rhs(self):
+        eng = SolveEngine(16, SolverConfig(strategy="sequential", v=8))
+        A, _ = _sys(16)
+        eng.factor(A)
+        per_thread, flushed = 30, [0, 0]
+        barrier = threading.Barrier(2)
+
+        def worker(i):
+            rng = np.random.default_rng(200 + i)
+            barrier.wait()
+            for j in range(per_thread):
+                eng.submit(rng.standard_normal(16).astype(np.float32))
+                if j % 5 == 4:
+                    flushed[i] += len(eng.flush())
+
+        threads = [threading.Thread(target=worker, args=(i,)) for i in (0, 1)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        total = sum(flushed) + len(eng.flush())
+        st = eng.stats()
+        # no request lost, none double-served, counters add up exactly
+        assert total == 2 * per_thread
+        assert st["batched_rhs"] == 2 * per_thread
+        assert st["solves"] == 2 * per_thread
+        assert st["pending"] == 0
+
+
+class TestMetricsRing:
+    def test_percentiles_nearest_rank(self):
+        r = Ring(200)
+        for v in range(1, 101):
+            r.record(v)
+        s = r.summary()
+        assert s["count"] == 100
+        assert s["p50"] == 50 and s["p95"] == 95 and s["p99"] == 99
+        assert s["mean"] == pytest.approx(50.5)
+        assert s["max"] == 100
+
+    def test_window_bounds_memory(self):
+        r = Ring(3)
+        for v in (1, 2, 3, 4, 5):
+            r.record(v)
+        assert len(r) == 3
+        assert r.count == 5  # all-time total survives the window
+        assert sorted(r.snapshot()) == [3, 4, 5]
+
+    def test_empty_summary_is_zeros(self):
+        s = Ring(8).summary()
+        assert s == {"count": 0, "mean": 0.0, "max": 0.0,
+                     "p50": 0.0, "p95": 0.0, "p99": 0.0}
+
+    def test_bad_capacity_rejected(self):
+        with pytest.raises(ValueError, match="capacity"):
+            Ring(0)
+
+
+class TestModuleSurface:
+    def test_removed_engine_module_errors_clearly(self):
+        with pytest.raises(ImportError, match="lm_engine"):
+            import repro.serving.engine  # noqa: F401
+
+    def test_unknown_attribute_errors_clearly(self):
+        import repro.serving
+
+        with pytest.raises(AttributeError, match="public"):
+            repro.serving.EngineThatNeverWas  # noqa: B018
+
+    def test_lm_engine_still_importable_from_surface(self):
+        from repro.serving import SamplerConfig, ServeEngine
+
+        assert SamplerConfig().temperature == 0.0
+        assert callable(ServeEngine)
+
+
+class TestServingSchema:
+    """The v6 serving section validator + smoke gate (pure-dict tests)."""
+
+    def _section(self, ratio=2.5, fill=0.9):
+        row = {"engine": "sync", "tenants": 4, "requests": 40, "wall_s": 1.0,
+               "throughput_rps": 100.0, "p50_ms": 1.0, "p95_ms": 2.0,
+               "p99_ms": 3.0, "batch_fill": 0.0, "shed_rate": 0.0,
+               "spill_rate": 0.0}
+        arow = dict(row, engine="async", throughput_rps=100.0 * ratio,
+                    batch_fill=fill)
+        return {"rows": [row, arow], "async_over_sync": ratio}
+
+    def test_valid_section_passes(self):
+        from benchmarks.run import validate_serving
+
+        assert validate_serving(self._section(), mode="full") == []
+
+    def test_full_mode_enforces_speedup_floor(self):
+        from benchmarks.run import validate_serving
+
+        errs = validate_serving(self._section(ratio=1.4), mode="full")
+        assert any("2.0x" in e for e in errs)
+        # smoke mode records the ratio but does not enforce the floor
+        assert validate_serving(self._section(ratio=1.4), mode="smoke") == []
+
+    def test_missing_rows_and_keys_flagged(self):
+        from benchmarks.run import validate_serving
+
+        assert validate_serving({}, mode="full")
+        sec = self._section()
+        del sec["rows"][1]["p99_ms"]
+        assert any("p99_ms" in e for e in validate_serving(sec, mode="full"))
+        sec = self._section()
+        sec["rows"] = [sec["rows"][0]]  # async row gone
+        assert any("async" in e for e in validate_serving(sec, mode="full"))
+
+    def test_gate_fires_on_ratio_and_fill_drop(self):
+        from benchmarks.run import serving_gate
+
+        base = {"serving": self._section(ratio=4.0, fill=0.9)}
+        ok = {"serving": self._section(ratio=3.0, fill=0.8)}
+        regs, compared = serving_gate(ok, base)
+        assert regs == [] and compared == 2
+        bad = {"serving": self._section(ratio=1.5, fill=0.2)}
+        regs, _ = serving_gate(bad, base)
+        assert len(regs) == 2
+        # no baseline -> gate reports nothing compared (callers say SKIPPED)
+        regs, compared = serving_gate(ok, None)
+        assert regs == [] and compared == 0
