@@ -19,6 +19,15 @@ B single-system executes, interleaved best-of-7, on both backends — the
 ``loop_over_batched`` throughput ratio is the acceptance metric (and the
 smoke perf gate compares it against the committed baseline).
 
+The ``mixed_precision`` rows (schema v7) time the end-to-end cost of an
+f64-quality solve three ways: genuine-f64 direct factor+solve (under
+``enable_x64``) against the f32 and bf16 factor + iterative-refinement
+pipelines (``SolverConfig(compute_dtype=...)`` + ``solve(refine_tol=...)``)
+— ``refined_over_direct`` is the wall ratio the full-run validator floors
+at < 1.0 for f32 and the smoke gate tracks PR-over-PR.  Measured rows also
+carry ``comm_per_proc_bytes`` (elements x compute-dtype itemsize — the
+wire-accurate volume) alongside the element counts.
+
 The ``hotloop`` rows A/B the shrinking-window + fused step body
 against the flat full-block baseline — full-run wall time for conflux and
 cholesky25d on both backends, plus the per-primitive breakdown (panel /
@@ -39,8 +48,10 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys, time, json
 sys.path.insert(0, %(src)r)
-import numpy as np, jax.numpy as jnp
+import numpy as np, jax, jax.numpy as jnp
+from jax.experimental import enable_x64
 from repro.api import SolverConfig, plan, plan_cache_stats, GridConfig
+from repro.api.config import resolve_dtype
 from repro.core.lu.cost_models import chol_model, conflux_model, scalapack2d_model
 
 SMOKE = %(smoke)r
@@ -96,10 +107,16 @@ for N in ((64,) if SMOKE else (128, 256)):
         backend = p.config.backend
         print(f"{name},{backend},{N},{res.grid},{dt*1e6:.0f},{err:.2e},{comm:.0f},"
               f"{p.trace_count},{hits}")
+        # the factors move over the wire in the *compute* dtype, so the
+        # byte-accurate volume is elements x its itemsize, not the working
+        # dtype's (schema v7; matches Factorization.comm_report)
+        itemsize = resolve_dtype(cfg.effective_compute_dtype).itemsize
         records.append({
             "strategy": name, "backend": backend, "N": N, "grid": str(res.grid),
             "wall_us_per_call": dt * 1e6, "reconstruction_err": err,
             "solve_err": solve_err, "comm_per_proc_elements": comm,
+            "comm_per_proc_bytes": comm * itemsize,
+            "compute_dtype": cfg.effective_compute_dtype,
             "model_per_proc_elements": model,
             "trace_count": p.trace_count, "plan_cache_hits": hits,
             "plan_is_shared": p is p2,
@@ -221,11 +238,79 @@ for (name, N, backend), r in sorted(by_key.items()):
         })
 for d in chol_vs_lu:
     print(f"# comm {d['grid']} N={d['N']}: lu/cholesky = {d['lu_over_chol']:.2f}x")
+
+# mixed-precision rows (schema v7): the end-to-end cost of an f64-quality
+# solve.  f64_ref_direct factors and solves in genuine f64 (enable_x64 —
+# jax on this container silently demotes otherwise); the refined rows
+# factor in the MXU-native compute dtype and recover working precision via
+# solve(refine_tol=...).  Wall time is factor + solve for both, interleaved
+# best-of so container drift lands on every config; residuals are measured
+# externally in numpy f64 against the same matrix.  N chosen where the
+# f64/f32 factorization ratio has opened up (~1.9x at N=512 on this
+# container vs 1.05x at N=256) so the full-run wall floor in run.py is a
+# real claim, not noise.  Diagonally dominant input: the bf16 pipeline
+# (~8 mantissa bits) only contracts for modest condition numbers — the
+# conditioning sweep lives in tests/test_mixed_precision.py.
+N_mp, v_mp = (128, 16) if SMOKE else (512, 32)
+rng_mp = np.random.default_rng(7)
+A_mp = rng_mp.standard_normal((N_mp, N_mp))
+A_mp += N_mp * np.eye(N_mp)
+b_mp = rng_mp.standard_normal((N_mp, 1))
+bden = float(np.abs(b_mp).max())
+mp_cases = [("f64_ref_direct", None), ("f32_refined", "float32"),
+            ("bf16_refined", "bfloat16")]
+mp_plans, mp_walls, mp_meta = {}, {}, {}
+
+def mp_run(cname, cdt):
+    cfg = SolverConfig(strategy="sequential", backend="ref", dtype="float64",
+                       compute_dtype=cdt, v=v_mp)
+    p = mp_plans.setdefault(cname, plan(N_mp, cfg))
+    t0 = time.perf_counter()
+    fact = p.execute(A_mp)
+    if cdt is None:
+        x = np.asarray(jax.block_until_ready(fact.solve(b_mp)))
+        iters, conv = 0, True
+    else:
+        # tol at ~10x f64 machine epsilon: the validator floors the refined
+        # residual at 10x the f64 direct row's, so refinement must iterate
+        # all the way down to working-precision level, not just "good enough"
+        rs = fact.solve(b_mp, refine_tol=2e-15, max_refine_iters=40)
+        x, iters, conv = np.asarray(rs), int(rs.refinement_iters), bool(rs.converged)
+    wall = time.perf_counter() - t0
+    res = float(np.abs(A_mp @ x.astype(np.float64) - b_mp).max() / bden)
+    return wall, res, iters, conv
+
+with enable_x64():  # the direct rows need genuine f64; refined rows manage
+    for cname, cdt in mp_cases:  # their own x64 scope but are no-ops under it
+        mp_run(cname, cdt)  # warm compile, untimed
+        mp_walls[cname] = []
+    for _ in range(5):  # interleaved best-of-5
+        for cname, cdt in mp_cases:
+            wall, res, iters, conv = mp_run(cname, cdt)
+            mp_walls[cname].append(wall)
+            mp_meta[cname] = (res, iters, conv, cdt)
+direct_wall = min(mp_walls["f64_ref_direct"]) * 1e6
+mixed_rows = []
+for cname, _ in mp_cases:
+    res, iters, conv, cdt = mp_meta[cname]
+    wall = min(mp_walls[cname]) * 1e6
+    mixed_rows.append({
+        "config": cname, "N": N_mp, "v": v_mp, "dtype": "float64",
+        "compute_dtype": cdt or "float64", "backend": "ref",
+        "wall_us": wall, "residual": res, "refinement_iters": iters,
+        "converged": conv,
+        "refined_over_direct": wall / max(direct_wall, 1e-9),
+    })
+for d in mixed_rows:
+    print(f"# mixed {d['config']} N={d['N']}: {d['wall_us']:.0f}us "
+          f"({d['refined_over_direct']:.2f}x of direct), residual "
+          f"{d['residual']:.2e}, {d['refinement_iters']} refine iters")
 print("BENCH_JSON:" + json.dumps({"measured": records,
                                   "backend_delta": deltas,
                                   "chol_vs_lu": chol_vs_lu,
                                   "hotloop": hotloop_rows,
                                   "batched": batched_rows,
+                                  "mixed_precision": mixed_rows,
                                   "plan_cache": plan_cache_stats()}))
 """
 

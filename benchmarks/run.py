@@ -18,16 +18,21 @@ against the *committed* smoke baseline's and the run fails when any row
 regresses past ``SMOKE_GATE_TOLERANCE`` (2x; ratios rather than absolute
 times so the shared CI container's load swings cancel — the in-run flat
 body is the control).  The gate also covers the ``batched`` rows
-(batched-vs-Python-loop throughput per backend) and the schema-v6
-``serving`` section (async-vs-sync serving throughput and batch-fill from
-``benchmarks.serve_load``): those regress when their ratio *drops* past
-tolerance.  ``--validate`` checks the full-run JSON (``--validate
---smoke`` the smoke one) against schema v6 — including the acceptance
-floors that the ref B=128, N=32 batched execute beats a Python loop of
-single executes by >= 3x and that the async serving tier beats the
-per-request sync baseline by >= 2x at saturating load — and exits
-non-zero on violations; CI runs smoke (with the gates) + validate and
-uploads the artifact.
+(batched-vs-Python-loop throughput per backend), the schema-v7
+``mixed_precision`` rows (the refined-low-precision vs f64-direct
+end-to-end wall ratio), and the ``serving`` section (async-vs-sync serving
+throughput and batch-fill from ``benchmarks.serve_load``): the serving /
+batched ratios regress when they *drop* past tolerance.  ``--validate``
+checks the full-run JSON (``--validate --smoke`` the smoke one) against
+schema v7 — including the acceptance floors that the ref B=128, N=32
+batched execute beats a Python loop of single executes by >= 3x, that the
+async serving tier beats the per-request sync baseline by >= 2x at
+saturating load, that refined mixed-precision solves converge to within
+10x of the f64 direct residual, and (full runs) that the f32 factor +
+refine pipeline beats the f64 direct factor + solve on wall time and the
+serving section carries Poisson open-loop rows — and exits non-zero on
+violations; CI runs smoke (with the gates) + validate and uploads the
+artifact.
 """
 
 from __future__ import annotations
@@ -43,10 +48,11 @@ BENCH_SMOKE_JSON = os.path.join(_ROOT, "BENCH_lu.smoke.json")
 
 from benchmarks.serve_load import SERVING_MIN_SPEEDUP
 
-SCHEMA = "BENCH_lu.v6"
+SCHEMA = "BENCH_lu.v7"
 _MEASURED_KEYS = {
     "strategy", "backend", "N", "grid", "wall_us_per_call", "reconstruction_err",
-    "solve_err", "comm_per_proc_elements", "model_per_proc_elements",
+    "solve_err", "comm_per_proc_elements", "comm_per_proc_bytes",
+    "compute_dtype", "model_per_proc_elements",
     "trace_count", "plan_cache_hits",
 }
 _DELTA_KEYS = {"strategy", "N", "ref_us", "pallas_us", "pallas_over_ref"}
@@ -63,7 +69,23 @@ BATCHED_MIN_SPEEDUP = 3.0
 _SERVING_ROW_KEYS = {"engine", "tenants", "requests", "wall_s",
                      "throughput_rps", "p50_ms", "p95_ms", "p99_ms",
                      "batch_fill", "shed_rate", "spill_rate"}
+_OPEN_LOOP_ROW_KEYS = {"engine", "arrival_rate_rps", "offered_rps",
+                       "achieved_rps", "p50_ms", "p95_ms", "p99_ms"}
 _CACHE_KEYS = {"hits", "misses", "evictions", "size", "capacity"}
+_MIXED_KEYS = {"config", "N", "v", "dtype", "compute_dtype", "backend",
+               "wall_us", "residual", "refinement_iters", "converged",
+               "refined_over_direct"}
+_MIXED_CONFIGS = {"f64_ref_direct", "f32_refined", "bf16_refined"}
+# Full-run acceptance floors for the mixed_precision section: the refined
+# low-precision pipelines must land within this factor of the f64 direct
+# solve's residual (working-precision quality recovered by refinement) ...
+MIXED_MAX_RESIDUAL_BLOWUP = 10.0
+# ... and the f32 factor + refine end-to-end wall time must actually beat
+# the f64 direct factor + solve (the whole point of computing in the
+# MXU-native dtype).  bf16 carries the same residual floor but no wall
+# floor: XLA:CPU emulates bf16 arithmetic, so its wall time on this
+# container says nothing about MXU behavior.
+MIXED_WALL_FLOOR_CONFIGS = {"f32_refined"}
 
 # Perf-regression gate: a freshly measured windowed/flat hotloop ratio may
 # exceed the committed baseline's by at most this factor.  The gate compares
@@ -178,6 +200,47 @@ def validate_bench(path: str = BENCH_JSON, mode: str = "full") -> list[str]:
             )
         if not seen_ref_accept:
             errors.append("batched must carry the ref B=128 N=32 acceptance row")
+    mixed = bench.get("mixed_precision")
+    if measured and not mixed:
+        errors.append("missing section: mixed_precision (f64-direct vs "
+                      "refined low-precision solve rows)")
+    direct = next((d for d in mixed or []
+                   if d.get("config") == "f64_ref_direct"), None)
+    for i, d in enumerate(mixed or []):
+        missing = _MIXED_KEYS - set(d)
+        if missing:
+            errors.append(f"mixed_precision[{i}] missing keys: {sorted(missing)}")
+            continue
+        if d["config"] == "f64_ref_direct":
+            continue
+        if not d["converged"]:
+            errors.append(
+                f"mixed_precision[{i}] ({d['config']}): refinement did not "
+                f"converge (residual {d['residual']:.2e} after "
+                f"{d['refinement_iters']} iters)"
+            )
+        if direct and not (
+                d["residual"] <= direct["residual"] * MIXED_MAX_RESIDUAL_BLOWUP):
+            errors.append(
+                f"mixed_precision[{i}] ({d['config']}): refined residual "
+                f"{d['residual']:.2e} exceeds the f64 direct baseline "
+                f"{direct['residual']:.2e} by more than "
+                f"{MIXED_MAX_RESIDUAL_BLOWUP:.0f}x"
+            )
+        if (mode == "full" and d["config"] in MIXED_WALL_FLOOR_CONFIGS
+                and not d["refined_over_direct"] < 1.0):
+            errors.append(
+                f"mixed_precision[{i}] ({d['config']}): factor+refine must "
+                f"beat the f64 direct factor+solve on wall time, got "
+                f"{d['refined_over_direct']:.2f}x"
+            )
+    if mixed:
+        configs = {d.get("config") for d in mixed}
+        if not _MIXED_CONFIGS <= configs:
+            errors.append(
+                f"mixed_precision must carry {sorted(_MIXED_CONFIGS)}, "
+                f"saw {sorted(map(str, configs))}"
+            )
     serving = bench.get("serving")
     if measured and serving is None:
         errors.append("missing section: serving (sync-vs-async load rows "
@@ -191,7 +254,7 @@ def validate_bench(path: str = BENCH_JSON, mode: str = "full") -> list[str]:
 
 
 def validate_serving(serving, mode: str = "full") -> list[str]:
-    """Schema check for the v6 `serving` section (shared with serve_load)."""
+    """Schema check for the v7 `serving` section (shared with serve_load)."""
     errors: list[str] = []
     if not isinstance(serving, dict):
         return [f"serving must be a dict section, got {type(serving).__name__}"]
@@ -223,6 +286,27 @@ def validate_serving(serving, mode: str = "full") -> list[str]:
                     f"serving.rows[{i}]: async batch_fill must be in (0, 1], "
                     f"got {row['batch_fill']}"
                 )
+    open_loop = serving.get("open_loop")
+    if mode == "full" and open_loop is None:
+        errors.append("serving.open_loop missing: full runs must carry the "
+                      "Poisson open-loop rows (serve_load --arrival-rate)")
+    if open_loop is not None:
+        orows = open_loop.get("rows")
+        if not isinstance(orows, list) or not orows:
+            errors.append("serving.open_loop.rows must be a non-empty list")
+        else:
+            oengines = set()
+            for i, row in enumerate(orows):
+                missing = _OPEN_LOOP_ROW_KEYS - set(row)
+                if missing:
+                    errors.append(
+                        f"serving.open_loop.rows[{i}] missing keys: "
+                        f"{sorted(missing)}")
+                oengines.add(row.get("engine"))
+            if not {"sync", "async"} <= oengines:
+                errors.append(
+                    f"serving.open_loop.rows must cover both disciplines, "
+                    f"saw {sorted(map(str, oengines))}")
     return errors
 
 
@@ -311,6 +395,24 @@ def smoke_gate(bench: dict, baseline: dict | None,
                 f"batched {d['backend']} B={d['B']} N={d['N']}: loop/batched "
                 f"ratio {d['loop_over_batched']:.2f} vs baseline "
                 f"{ref['loop_over_batched']:.2f} (< 1/{tol:.1f}x tolerance)"
+            )
+    mbase = {d["config"]: d for d in (baseline or {}).get("mixed_precision", [])
+             if isinstance(d, dict) and _MIXED_KEYS <= set(d)}
+    for d in bench.get("mixed_precision", []):
+        if not _MIXED_KEYS <= set(d) or d["config"] == "f64_ref_direct":
+            continue
+        ref = mbase.get(d["config"])
+        if ref is None or ref.get("N") != d.get("N"):
+            continue
+        compared += 1
+        # refined/direct is again a ratio of two same-process timings, so the
+        # container's load swings cancel; a blow-up means the refine loop or
+        # the low-precision factorization itself regressed.
+        if d["refined_over_direct"] > tol * ref["refined_over_direct"]:
+            regressions.append(
+                f"mixed_precision {d['config']} N={d['N']}: refined/direct "
+                f"ratio {d['refined_over_direct']:.2f} vs baseline "
+                f"{ref['refined_over_direct']:.2f} (> {tol:.1f}x tolerance)"
             )
     sregs, scompared = serving_gate(bench, baseline, tol)
     return regressions + sregs, compared + scompared

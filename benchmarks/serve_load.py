@@ -25,8 +25,17 @@ come from the same per-request timestamps for both disciplines; the async
 row additionally carries the engine's batch-fill ratio, shed/spill rates,
 queue-depth percentiles, and ragged-padding waste from `stats()`.
 
+``--arrival-rate R`` adds a Poisson *open-loop* phase after the closed-loop
+rounds: requests arrive on a global exponential-gap schedule at R rps that
+does not adapt to service time, and latency counts from the scheduled
+arrival — so queueing delay from falling behind shows up in the
+percentiles instead of being hidden by the closed loop's self-throttling.
+Full runs default to R = 0.75x the measured sync throughput (the stable
+region, where the comparison is about tail latency, not saturation); the
+rows land under ``serving.open_loop``.
+
 The result merges into ``BENCH_lu.json`` (``BENCH_lu.smoke.json`` with
-``--smoke``) as the schema-v6 ``serving`` section.  ``--validate`` checks
+``--smoke``) as the schema-v7 ``serving`` section.  ``--validate`` checks
 the section against the schema after the run; smoke runs additionally gate
 the async/sync throughput ratio and the batch-fill ratio against the
 committed smoke baseline (same tolerance story as the hotloop gate: ratios
@@ -55,7 +64,7 @@ SERVING_MIN_SPEEDUP = 2.0
 # keep `tenants` requests in flight, so max_batch ~ tenants/2 keeps the
 # batch-fill ratio near 1.0 instead of stalling on the deadline every cycle.
 FULL = dict(tenants=16, requests=40, max_batch=16, max_delay_ms=2.0,
-            sizes=(24, 32), rounds=3)
+            sizes=(24, 32), rounds=3, arrival_rate="auto")
 SMOKE = dict(tenants=8, requests=12, max_batch=8, max_delay_ms=2.0,
              sizes=(24, 32), rounds=2)
 
@@ -118,9 +127,55 @@ def _closed_loop(streams, do_request) -> tuple[float, list[float]]:
     return wall, [v for lst in lat_lists for v in lst]
 
 
+def _open_loop(streams, do_request, rate_rps: float,
+               seed: int = 0) -> tuple[float, list[float]]:
+    """Poisson open-loop: requests arrive on a global exponential-gap
+    schedule at `rate_rps`, regardless of whether earlier ones finished —
+    the arrival process does not adapt to service time, so queueing delay
+    is visible instead of hidden by a closed loop's self-throttling.
+    Latency is measured from the *scheduled arrival* to completion: a
+    dispatcher running behind schedule charges the backlog to the request,
+    exactly as a client that sent at the scheduled instant would see it.
+    Returns (wall_s, latencies_ms)."""
+    reqs = []  # round-robin interleave of the tenant streams
+    for i in range(max(len(s) for s in streams)):
+        for t, s in enumerate(streams):
+            if i < len(s):
+                reqs.append((t, *s[i]))
+    rng = np.random.default_rng(seed)
+    sched = np.cumsum(rng.exponential(1.0 / rate_rps, size=len(reqs)))
+    lats: list[float | None] = [None] * len(reqs)
+    errors: list[BaseException] = []
+    threads = []
+
+    t0 = time.perf_counter()
+    for i, (t, A, b) in enumerate(reqs):
+        delay = sched[i] - (time.perf_counter() - t0)
+        if delay > 0:
+            time.sleep(delay)
+
+        def work(i=i, t=t, A=A, b=b, s=sched[i]):
+            try:
+                do_request(t, A, b)
+                lats[i] = (time.perf_counter() - t0 - s) * 1e3
+            except BaseException as exc:  # noqa: BLE001
+                errors.append(exc)
+
+        th = threading.Thread(target=work, daemon=True)
+        th.start()
+        threads.append(th)
+    for th in threads:
+        th.join()
+    wall = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    return wall, [v for v in lats if v is not None]
+
+
 def run_load(tenants: int, requests: int, max_batch: int, max_delay_ms: float,
-             sizes, rounds: int, check: bool = True) -> dict:
-    """Measure both disciplines; returns the schema-v6 `serving` section."""
+             sizes, rounds: int, check: bool = True,
+             arrival_rate: float | None = None) -> dict:
+    """Measure both disciplines; returns the schema-v7 `serving` section."""
     import jax
 
     from repro.api import SolverConfig, plan
@@ -168,8 +223,35 @@ def run_load(tenants: int, requests: int, max_batch: int, max_delay_ms: float,
         print(f"# round {rnd}: sync {best['sync']['throughput_rps']:.0f} rps "
               f"(best so far), async {best['async']['throughput_rps']:.0f} rps")
 
-    st = eng.stats()
-    a = st["async"]
+    st = eng.stats()  # snapshot before the open-loop phase: the async row's
+    a = st["async"]   # batch-fill/shed/spill describe the closed-loop run
+
+    # -- optional Poisson open-loop phase (--arrival-rate / full runs) ------
+    open_loop = None
+    if arrival_rate is not None:
+        rate = (0.75 * best["sync"]["throughput_rps"]
+                if arrival_rate == "auto" else float(arrival_rate))
+        # Warm every partial-batch slot program first: open-loop drains land
+        # on whatever batch size the arrival pattern produced, so unlike the
+        # closed loop (which saturates to full batches) the early traffic
+        # would keep hitting cold ~100ms jit traces of fresh (slotB, slotN)
+        # programs — charged to whichever requests sat in those batches.
+        eng.warm_slots(sizes)
+        open_rows = []
+        for name, fn in (("sync", sync_request), ("async", async_request)):
+            wall, lats = _open_loop(streams, fn, rate)
+            open_rows.append({
+                "engine": name, "arrival_rate_rps": round(rate, 1),
+                "offered_rps": round(rate, 1),
+                "achieved_rps": round(len(lats) / wall, 1),
+                **{k: round(v, 3) for k, v in _percentiles(lats).items()},
+            })
+            print(f"# open-loop {name} @ {rate:.0f} rps: achieved "
+                  f"{open_rows[-1]['achieved_rps']:.0f} rps, p50 "
+                  f"{open_rows[-1]['p50_ms']:.2f}ms p99 "
+                  f"{open_rows[-1]['p99_ms']:.2f}ms (from scheduled arrival)")
+        open_loop = {"arrival_rate_rps": round(rate, 1),
+                     "seed": 0, "rows": open_rows}
     eng.close()
 
     rows = []
@@ -199,6 +281,8 @@ def run_load(tenants: int, requests: int, max_batch: int, max_delay_ms: float,
         "rows": rows,
         "async_over_sync": round(ratio, 3),
     }
+    if open_loop is not None:
+        serving["open_loop"] = open_loop
     for row in rows:
         print(f"# serving {row['engine']}: {row['throughput_rps']:.0f} rps, "
               f"p50 {row['p50_ms']:.2f}ms p99 {row['p99_ms']:.2f}ms"
@@ -271,9 +355,15 @@ if __name__ == "__main__":
     ap.add_argument("--max-batch", dest="max_batch", type=int)
     ap.add_argument("--max-delay-ms", dest="max_delay_ms", type=float)
     ap.add_argument("--rounds", type=int)
+    ap.add_argument("--arrival-rate", dest="arrival_rate", type=float,
+                    help="Poisson open-loop arrival rate (requests/s); adds "
+                         "open_loop rows with latency measured from the "
+                         "scheduled arrival (full runs default to 0.75x the "
+                         "measured sync throughput)")
     args = ap.parse_args()
     sys.path.insert(0, os.path.join(_ROOT, "src"))
     result = main(smoke=args.smoke, tenants=args.tenants,
                   requests=args.requests, max_batch=args.max_batch,
-                  max_delay_ms=args.max_delay_ms, rounds=args.rounds)
+                  max_delay_ms=args.max_delay_ms, rounds=args.rounds,
+                  arrival_rate=args.arrival_rate)
     sys.exit(_merge_and_gate(result["serving"], args.smoke, args.validate))

@@ -6,16 +6,20 @@
     p = plan(N, cfg)            # cached: traces/compiles once per key
     fact = p.execute(A)         # Factorization
     x = fact.solve(b)           # batched multi-RHS triangular solves
-    s, ld = fact.slogdet()
+    rs = fact.solve(b, refine_tol=1e-12)   # iterative refinement (mixed
+    s, ld = fact.slogdet()                 # precision: compute_dtype=...)
     print(fact.comm_report())
 
 Strategies plug in through `@register_strategy("name")` — see
 `repro.api.strategies` for the built-ins (sequential / conflux /
 baseline2d / auto for LU; sequential_chol / cholesky25d for SPD).  Local compute routes through a `KernelBackend`
 (`SolverConfig.backend`: "ref" jnp paths or "pallas" MXU-tiled kernels).
-Plans are cached by (N, dtype, strategy, pivot, grid, v, backend) in an
-LRU-bounded cache; `plan_cache_stats()` exposes hit/miss/eviction counters
-and `set_plan_cache_capacity()` the bound.
+Plans are cached by (N, dtype, strategy, pivot, grid, v, backend,
+compute_dtype) in an LRU-bounded cache — a low-precision
+`compute_dtype` plan never collides with its full-precision sibling,
+while `compute_dtype == dtype` normalizes to the shared default key;
+`plan_cache_stats()` exposes hit/miss/eviction counters and
+`set_plan_cache_capacity()` the bound.
 """
 
 from repro.api.config import SolverConfig

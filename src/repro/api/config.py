@@ -21,6 +21,27 @@ HOTLOOPS = ("windowed", "flat")
 # shims normalize integer/bool matrices to).
 DEFAULT_DTYPE = "float32"
 
+# Dtypes the factorization may *compute* in (SolverConfig.compute_dtype).
+# bfloat16/float16 are the MXU-native low-precision inputs; the kernels
+# accumulate in fp32 regardless, and iterative refinement
+# (`Factorization.solve(refine_tol=...)`) recovers working-precision solves.
+COMPUTE_DTYPES = ("bfloat16", "float16", "float32", "float64")
+
+
+def resolve_dtype(name) -> np.dtype:
+    """np.dtype resolution that also understands the ml_dtypes names.
+
+    Plain numpy only knows 'bfloat16' once ml_dtypes has registered it;
+    jax always ships ml_dtypes, so importing it on demand keeps this module
+    import-light while making `np.dtype('bfloat16')` work.
+    """
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # noqa: F401 — registers bfloat16 et al. with numpy
+
+        return np.dtype(name)
+
 
 @dataclass(frozen=True)
 class SolverConfig:
@@ -35,7 +56,20 @@ class SolverConfig:
               matrices, so the Cholesky strategies normalize any requested
               pivot to "none" at resolve time and the LU strategies reject it.
     grid:     explicit GridConfig; None lets the strategy choose one.
-    dtype:    computation dtype (normalized to its numpy name, so configs hash).
+    dtype:    *working* dtype (normalized to its numpy name, so configs hash):
+              the precision of the input matrix, the retained `A_ref`, the
+              refinement residual, and the refined solution.
+    compute_dtype: the dtype the factorization kernels actually run in, or
+              None to compute in `dtype` (the default; `compute_dtype ==
+              dtype` normalizes to None so default-path plans cache-share).
+              Pick an MXU-native low precision ("bfloat16"/"float16"/
+              "float32") to keep the pallas kernels on dtypes the hardware
+              has a fast path for — e.g. `dtype="float64",
+              compute_dtype="float32"` factors in f32 (no pallas -> ref
+              fallback) and `Factorization.solve(b, refine_tol=...)`
+              recovers f64-quality solutions via iterative refinement on
+              the cached low-precision factors.  Must not be wider than
+              `dtype`.
     M:        fast-memory budget per processor, in elements (drives the
               replication factor c <= P*M/N^2 during grid optimization).
     P_target: processor budget for grid selection; None = all local devices.
@@ -67,6 +101,7 @@ class SolverConfig:
     backend: str = "ref"
     hotloop: str = "windowed"
     B: int | None = None
+    compute_dtype: str | None = None
 
     def __post_init__(self):
         dt = np.dtype(self.dtype)
@@ -83,6 +118,31 @@ class SolverConfig:
                 f"error; cast the matrix or pass dtype='float32'/'float64'"
             )
         object.__setattr__(self, "dtype", dt.name)
+        if self.compute_dtype is not None:
+            try:
+                cdt = resolve_dtype(self.compute_dtype)
+            except TypeError:
+                raise ValueError(
+                    f"compute_dtype {self.compute_dtype!r} is not a known "
+                    f"dtype; choose from {COMPUTE_DTYPES}"
+                ) from None
+            if cdt.name not in COMPUTE_DTYPES:
+                raise ValueError(
+                    f"compute_dtype {cdt.name!r} is not a supported kernel "
+                    f"dtype; choose from {COMPUTE_DTYPES}"
+                )
+            if cdt.itemsize > dt.itemsize:
+                raise ValueError(
+                    f"compute_dtype {cdt.name!r} is wider than the working "
+                    f"dtype {dt.name!r}; low-precision compute + iterative "
+                    f"refinement only makes sense with compute_dtype <= dtype"
+                )
+            # compute == working is the default path; normalizing to None
+            # keeps those configs sharing one cache key (and keeps the
+            # bit-exactness oracle trivial).
+            object.__setattr__(
+                self, "compute_dtype", None if cdt.name == dt.name else cdt.name
+            )
         if self.pivot not in PIVOTS:
             raise ValueError(f"unknown pivot {self.pivot!r}; choose from {PIVOTS}")
         if not isinstance(self.backend, str) or not self.backend:
@@ -102,13 +162,20 @@ class SolverConfig:
         """Functional update (dataclasses.replace with validation rerun)."""
         return replace(self, **changes)
 
+    @property
+    def effective_compute_dtype(self) -> str:
+        """The dtype the kernels actually run in (compute_dtype or dtype)."""
+        return self.compute_dtype or self.dtype
+
     def cache_key(self, N: int) -> tuple:
         """Key identifying the compiled plan this config resolves to.
 
         Only meaningful on a *resolved* config (concrete strategy + grid +
         backend); `plan()` resolves before keying, so a pallas plan and a ref
         plan of the same problem never share a cache entry.  B is part of
-        the key, so `plan((B, N))` and `plan(N)` never collide.
+        the key, so `plan((B, N))` and `plan(N)` never collide, and
+        compute_dtype is part of the key, so a low-precision plan never
+        collides with the full-precision plan of the same working dtype.
         """
         return (N, self.dtype, self.strategy, self.pivot, self.grid, self.v,
-                self.backend, self.hotloop, self.B)
+                self.backend, self.hotloop, self.B, self.compute_dtype)

@@ -56,7 +56,11 @@ def profile_primitives(N: int, config, grid=None, repeats: int = 3) -> dict:
     from repro.kernels.backend import get_backend
 
     bk = get_backend(config.backend)
-    dtype = np.dtype(config.dtype)
+    # profile on the dtype the kernels actually run in (mixed-precision
+    # plans compute in config.compute_dtype, not the working dtype)
+    from repro.api.config import resolve_dtype
+
+    dtype = resolve_dtype(getattr(config, "effective_compute_dtype", config.dtype))
     if grid is not None:
         v = grid.v
         R = (N // v // grid.Px) * v

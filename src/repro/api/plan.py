@@ -5,8 +5,8 @@ kernel backend, then returns the cached `FactorizationPlan` for that key —
 building (and therefore tracing/jitting) one only on a cache miss.  The plan
 owns the mesh, the block-cyclic layout, and the jitted shard_map executable;
 `plan.execute(A)` runs without re-tracing.  Executing the same
-(N, dtype, strategy, pivot, grid, v, backend) twice compiles exactly once —
-assert it with `plan.trace_count` or `plan_cache_stats()`.
+(N, dtype, compute_dtype, strategy, pivot, grid, v, backend) twice compiles
+exactly once — assert it with `plan.trace_count` or `plan_cache_stats()`.
 
 The cache is LRU-bounded (`set_plan_cache_capacity`, default
 REPRO_PLAN_CACHE_CAPACITY or 64): multi-tenant serving traffic with many
@@ -24,7 +24,7 @@ from collections import OrderedDict
 
 import numpy as np
 
-from repro.api.config import SolverConfig
+from repro.api.config import SolverConfig, resolve_dtype
 from repro.api.registry import get_strategy
 from repro.api.result import Factorization
 from repro.core.lu.grid import GridConfig
@@ -106,13 +106,18 @@ class FactorizationPlan:
                 f"plan was built for {what} (expects shape {want}), "
                 f"got A of shape {A.shape}"
             )
-        F, rows = self._run(A)
+        # Mixed precision: the kernels run in the (lower) compute dtype while
+        # A_ref keeps the working-precision matrix for refinement residuals.
+        compute = self.config.compute_dtype
+        A_lo = A if compute is None else A.astype(resolve_dtype(compute))
+        F, rows = self._run(A_lo)
         with self._count_lock:
             self.execute_count += 1
         return Factorization(
             F=F, rows=rows, grid=self.grid, comm=dict(self.comm),
             strategy=self.config.strategy, backend=self.config.backend,
             kind=self.kind, hotloop=dict(self.hotloop),
+            A_ref=A, work_dtype=np.dtype(self.config.dtype),
         )
 
     def __repr__(self):
@@ -148,6 +153,10 @@ _BUILDING: dict[tuple, threading.Event] = {}
 _STATS = {"hits": 0, "misses": 0, "evictions": 0}
 _CAPACITY = _capacity_from_env()
 _LOCK = threading.Lock()
+# Pallas->ref fallbacks already warned about, keyed per resolved plan shape:
+# re-resolving the same config (every serving request hits resolve) must not
+# re-emit the same warning.  Cleared with the plan cache.
+_FALLBACK_WARNED: set[tuple] = set()
 
 
 def _resolve_backend(N: int, config: SolverConfig) -> SolverConfig:
@@ -156,7 +165,9 @@ def _resolve_backend(N: int, config: SolverConfig) -> SolverConfig:
     Runs after strategy resolution, so the panel width is concrete (config.v
     or grid.v) and the fallback decision lands in the cache key — a config
     that *requested* pallas but cannot run it resolves to (and shares) the
-    ref plan.
+    ref plan.  The constraint check runs on the *effective compute dtype*:
+    `dtype='float64'` with `compute_dtype='float32'` keeps the pallas
+    kernels (factor low, refine back up) instead of falling back.
     """
     from repro.kernels.backend import available_backends, pallas_constraint_violation
 
@@ -167,13 +178,27 @@ def _resolve_backend(N: int, config: SolverConfig) -> SolverConfig:
         )
     if config.backend == "pallas":
         v = config.grid.v if config.grid is not None else config.v
-        reason = pallas_constraint_violation(config.dtype, v)
+        reason = pallas_constraint_violation(config.effective_compute_dtype, v)
         if reason:
-            warnings.warn(
-                f"backend 'pallas' cannot run this plan (N={N}: {reason}); "
-                f"falling back to 'ref'",
-                stacklevel=4,
-            )
+            if reason.startswith("dtype"):
+                fix = (
+                    "set SolverConfig(compute_dtype='float32') (or 'bfloat16') "
+                    "to factor in an MXU-native dtype and recover working "
+                    "precision with solve(refine_tol=...)"
+                )
+            else:
+                fix = "choose a panel width v that is a multiple of the tile"
+            key = (N, config.dtype, config.compute_dtype, v,
+                   config.strategy, config.B)
+            with _LOCK:
+                seen = key in _FALLBACK_WARNED
+                _FALLBACK_WARNED.add(key)
+            if not seen:
+                warnings.warn(
+                    f"backend 'pallas' cannot run this plan (N={N}: {reason}); "
+                    f"falling back to 'ref' — {fix}",
+                    stacklevel=4,
+                )
             return config.with_(backend="ref")
     return config
 
@@ -296,3 +321,4 @@ def clear_plan_cache() -> None:
     with _LOCK:
         _PLAN_CACHE.clear()
         _STATS.update(hits=0, misses=0, evictions=0)
+        _FALLBACK_WARNED.clear()

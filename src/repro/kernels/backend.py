@@ -140,44 +140,91 @@ def available_backends() -> tuple[str, ...]:
 def pallas_constraint_violation(dtype, v: int | None) -> str | None:
     """Why the resolved plan cannot run on the Pallas kernels (None = it can).
 
-    The rules mirror the hardware the kernels are tiled for: the MXU/VPU have
-    no float64 path (the kernels accumulate in fp32), and the VPU operates on
-    (8, 128) fp32 tiles, so sub-8 or non-8-aligned panel widths would force
-    ragged lane masking the kernels do not implement.
+    `dtype` is the *compute* dtype the kernels would run in — callers pass
+    `SolverConfig.effective_compute_dtype`, so `dtype='float64'` with
+    `compute_dtype='float32'` keeps the pallas kernels.  The rules mirror the
+    hardware the kernels are tiled for: the MXU/VPU have no float64 path (the
+    kernels accumulate in fp32), and the VPU's minimum tile is (8, 128) for
+    4-byte and (16, 128) for 2-byte dtypes, so unaligned panel widths would
+    force ragged sublane masking the kernels do not implement.
     """
-    if np.dtype(dtype).itemsize > 4:
+    dt = np.dtype(dtype)
+    if dt.itemsize > 4:
         return (
-            f"dtype {np.dtype(dtype).name} exceeds the fp32 accumulation the "
+            f"dtype {dt.name} exceeds the fp32 accumulation the "
             f"MXU-tiled kernels provide"
         )
-    if v is not None and (v < 8 or v % 8):
-        return f"panel width v={v} is not a multiple of the 8-sublane VPU tile"
+    sublane = 8 * (4 // dt.itemsize)
+    if v is not None and (v < sublane or v % sublane):
+        return (
+            f"panel width v={v} is not a multiple of the {sublane}-sublane "
+            f"VPU tile for {dt.name}"
+        )
     return None
+
+
+def _wants_f32_accum(*arrays) -> bool:
+    """True when the inputs are sub-4-byte floats (bf16/f16): the ref
+    primitives then compute in fp32 and round the result back, matching the
+    fp32 accumulation scratch the Pallas kernels use on those dtypes."""
+    return jnp.dtype(arrays[0].dtype).itemsize < 4
 
 
 class RefBackend:
     """Pure-jnp primitives — the numerics the strategies inlined before the
-    dispatch layer existed, bit-for-bit: native-dtype solves and matmuls."""
+    dispatch layer existed, bit-for-bit on >= 4-byte dtypes: native-dtype
+    solves and matmuls.  Sub-4-byte inputs (bf16/f16, the mixed-precision
+    compute dtypes) are upcast to fp32 per primitive and rounded back on the
+    way out — the same fp32-accumulation contract the Pallas kernels honor,
+    so ref and pallas pick identical pivots on low-precision panels."""
 
     name = "ref"
 
     def panel_lup(self, panel, weights, v):
+        if _wants_f32_accum(panel):
+            F, order, ok = masked_lup(
+                panel.astype(jnp.float32), weights.astype(jnp.float32), v
+            )
+            return F.astype(panel.dtype), order, ok
         return masked_lup(panel, weights, v)
 
     def panel_chol(self, A):
+        # jnp.linalg.cholesky has no bf16/f16 lowering, so the upcast is
+        # load-bearing here, not just an accumulation-precision choice.
+        if _wants_f32_accum(A):
+            return jnp.linalg.cholesky(A.astype(jnp.float32)).astype(A.dtype)
         return jnp.linalg.cholesky(A)
 
     def trsm_right_upper(self, B, U):
+        if _wants_f32_accum(B):
+            return jax.scipy.linalg.solve_triangular(
+                U.astype(jnp.float32).T, B.astype(jnp.float32).T, lower=True
+            ).T.astype(B.dtype)
         return jax.scipy.linalg.solve_triangular(U.T, B.T, lower=True).T
 
     def trsm_left_lower(self, L, B, *, unit=True):
+        if _wants_f32_accum(B):
+            return jax.scipy.linalg.solve_triangular(
+                L.astype(jnp.float32), B.astype(jnp.float32), lower=True,
+                unit_diagonal=unit,
+            ).astype(B.dtype)
         return jax.scipy.linalg.solve_triangular(L, B, lower=True, unit_diagonal=unit)
 
     def schur_update(self, A, L, U):
+        if _wants_f32_accum(A):
+            out = A.astype(jnp.float32) - jnp.matmul(
+                L, U, preferred_element_type=jnp.float32
+            )
+            return out.astype(A.dtype)
         return A - L @ U
 
     def fused_trsm_schur(self, A, L00, R01, L10, *, unit=True):
         U01 = self.trsm_left_lower(L00, R01, unit=unit)
+        if _wants_f32_accum(A):
+            out = A.astype(jnp.float32) - jnp.matmul(
+                L10, U01, preferred_element_type=jnp.float32
+            )
+            return out.astype(A.dtype), U01
         return A - L10 @ U01, U01
 
     # Batched = vmap of the single-system methods, so a `plan((B, N))` on the

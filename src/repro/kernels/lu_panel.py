@@ -47,15 +47,23 @@ def _panel_rounds(F, w, *, v: int):
 
 
 def _kernel(panel_ref, w_ref, f_ref, order_ref, ok_ref, *, v: int):
-    F, _, order, ok = _panel_rounds(panel_ref[...], w_ref[...], v=v)
-    f_ref[...] = F
+    # The rounds run in fp32 regardless of the panel dtype (a no-op for f32
+    # panels): bf16/f16 -> f32 is exact, so the argmax pivot choice matches
+    # the ref backend's fp32-accumulating masked_lup bit-for-bit, and only
+    # the final packed factors round back down.
+    F, _, order, ok = _panel_rounds(
+        panel_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32), v=v
+    )
+    f_ref[...] = F.astype(f_ref.dtype)
     order_ref[...] = order
     ok_ref[...] = ok
 
 
 def _batched_kernel(panel_ref, w_ref, f_ref, order_ref, ok_ref, *, v: int):
-    F, _, order, ok = _panel_rounds(panel_ref[0], w_ref[0], v=v)
-    f_ref[0] = F
+    F, _, order, ok = _panel_rounds(
+        panel_ref[0].astype(jnp.float32), w_ref[0].astype(jnp.float32), v=v
+    )
+    f_ref[0] = F.astype(f_ref.dtype)
     order_ref[0] = order
     ok_ref[0] = ok
 

@@ -118,6 +118,17 @@ class AsyncSolveEngine:
         queues directly — the executor owns them)."""
         return self._engine
 
+    def warm_slots(self, sizes=(None,), max_batch: int | None = None) -> int:
+        """Pre-trace the batched slot programs (see SolveEngine.warm_slots).
+
+        The executor drains at most `self.max_batch` requests per flush, so
+        that is the default slot ceiling; the sync engine shares the same
+        global plan cache, so warming through it covers the async path too.
+        """
+        return self._engine.warm_slots(
+            sizes, max_batch=self.max_batch if max_batch is None else max_batch
+        )
+
     def start(self) -> None:
         """Spawn the background executor (idempotent)."""
         with self._cv:
@@ -162,7 +173,9 @@ class AsyncSolveEngine:
 
     # -- request path --------------------------------------------------------
 
-    def submit(self, A, b, tenant: str = "default") -> Future:
+    def submit(self, A, b, tenant: str = "default", *,
+               refine_tol: float | None = None,
+               max_refine_iters: int = 25) -> Future:
         """Queue an n x n system solve (n <= N); returns its Future.
 
         Validation (square, real, n <= N, matching RHS) happens eagerly in
@@ -170,8 +183,14 @@ class AsyncSolveEngine:
         a batch holding other tenants' requests hostage.  At `max_queue`
         pending for this tenant the overload policy applies: "shed" raises
         `Overloaded`, "spill" solves inline and returns a completed future.
+
+        `refine_tol` rides the request through the batch slots: the flush
+        runs per-request iterative refinement on the lanes that asked for it
+        (see `SolveEngine.submit_system`); the future then resolves to the
+        refined, working-precision solution.
         """
-        prep = self._engine._prepare_system(A, b)  # eager validation
+        prep = self._engine._prepare_system(  # eager validation
+            A, b, refine_tol, max_refine_iters)
         fut: Future = Future()
         now = self._clock()
         req = Request(tenant=tenant, prep=prep, future=fut, t_submit=now)
@@ -208,6 +227,10 @@ class AsyncSolveEngine:
         cfg = self._engine.config.with_(
             strategy=self._spill_strategy, grid=None, B=None)
         fact = plan(prep.slotN, cfg).execute(prep.A)
+        if prep.refine_tol is not None:
+            rs = fact.solve(prep.b, refine_tol=prep.refine_tol,
+                            max_refine_iters=prep.max_refine_iters)
+            return np.asarray(rs.x)[:prep.n]
         x = np.asarray(jax.block_until_ready(fact.solve(prep.b)))
         return x[:prep.n]
 

@@ -73,12 +73,18 @@ class _PreparedSystem(NamedTuple):
     padding never perturbs the leading block's factors or pivots); b is
     [slotN] with a zero tail, so the padded solution's tail is zero and
     `x[:n]` is the exact solution of the original system.
+
+    refine_tol is the per-request iterative-refinement tolerance (None =
+    plain factor-precision solve); the identity tail keeps refinement exact
+    too — the padded lanes' residuals are identically zero.
     """
 
     A: np.ndarray
     b: np.ndarray
     n: int
     slotN: int
+    refine_tol: float | None = None
+    max_refine_iters: int = 25
 
 
 class SolveEngine:
@@ -102,6 +108,9 @@ class SolveEngine:
         self._n_batched_factor = 0  # batched factorizations (bucket flushes)
         self._n_batched_systems = 0  # systems that rode a batched factorization
         self._n_batch_pad = 0  # identity systems added to fill batch slots
+        self._n_refined = 0  # systems served with iterative refinement
+        self._n_refine_iters = 0  # refinement iterations across those
+        self._n_refine_nonconverged = 0  # refined systems that hit the cap
         self._cells_useful = 0  # sum of n^2 over real flushed systems
         self._cells_batched = 0  # sum of slotB * slotN^2 over bucket flushes
         self._t_factor = 0.0
@@ -201,7 +210,8 @@ class SolveEngine:
         X = np.asarray(X)
         return [X[:, j] for j in range(X.shape[1])]
 
-    def _prepare_system(self, A, b) -> _PreparedSystem:
+    def _prepare_system(self, A, b, refine_tol: float | None = None,
+                        max_refine_iters: int = 25) -> _PreparedSystem:
         """Validate an (A, b) request and pad it into its power-of-two N slot.
 
         Raises ValueError on malformed input (the eager-failure contract of
@@ -209,6 +219,18 @@ class SolveEngine:
         both the engine queue and the async tier's tenant queues hold
         ready-to-stack requests.
         """
+        if refine_tol is not None:
+            refine_tol = float(refine_tol)
+            if not refine_tol > 0:
+                raise ValueError(
+                    f"refine_tol must be a positive relative-residual "
+                    f"tolerance, got {refine_tol!r}"
+                )
+            if not isinstance(max_refine_iters, int) or max_refine_iters < 0:
+                raise ValueError(
+                    f"max_refine_iters must be a non-negative int, got "
+                    f"{max_refine_iters!r}"
+                )
         A = np.asarray(A)
         b = np.asarray(b)
         n = A.shape[0] if A.ndim == 2 else 0
@@ -247,9 +269,10 @@ class SolveEngine:
             Ap[idx, idx] = 1.0  # identity tail: trivially factorizable
             bp = np.zeros(slotN, dtype)
             bp[:n] = b
-        return _PreparedSystem(Ap, bp, n, slotN)
+        return _PreparedSystem(Ap, bp, n, slotN, refine_tol, max_refine_iters)
 
-    def submit_system(self, A, b) -> int:
+    def submit_system(self, A, b, *, refine_tol: float | None = None,
+                      max_refine_iters: int = 25) -> int:
         """Queue a whole (A, b) system for a batched factorize+solve.
 
         Accepts any square n x n system with n <= the engine's N (ragged-N
@@ -258,8 +281,16 @@ class SolveEngine:
         list `flush_systems()` returns.  Both the matrix and the RHS are
         validated eagerly so a malformed request fails at submit time, not
         inside a batch holding other requests hostage.
+
+        `refine_tol` requests per-request iterative refinement: the bucket
+        still factorizes and solves as one batch, then the refine-requesting
+        lanes run a second (batched) refinement pass against their retained
+        working-precision systems — lanes without it get the bit-identical
+        plain solve they always got.
         """
-        return self._enqueue_prepared(self._prepare_system(A, b))
+        return self._enqueue_prepared(
+            self._prepare_system(A, b, refine_tol, max_refine_iters)
+        )
 
     def _enqueue_prepared(self, prep: _PreparedSystem) -> int:
         """Queue an already-validated system (async tier fast path)."""
@@ -287,6 +318,47 @@ class SolveEngine:
             self.config.with_(strategy=strategy, grid=None, B=None),
         )
 
+    def warm_slots(self, sizes=(None,), max_batch: int = 1) -> int:
+        """Pre-trace the batched slot programs cold-start traffic would hit.
+
+        `flush_systems` compiles one program per (batch slot, N slot) pair
+        on first use — a ~100ms jit trace charged to whichever requests sit
+        in that first batch.  Sparse arrival patterns are the worst case:
+        every drain lands a *different* partial-batch slot, so early traffic
+        keeps hitting fresh compiles.  This executes one identity batch plus
+        solve through the same cached plans for each request size in `sizes`
+        (None = the engine's own N) crossed with every power-of-two batch
+        slot up to `max_batch`, and returns the number of programs warmed.
+        Stats counters are untouched: warming is not traffic.
+        """
+        slotNs = set()
+        for n in sizes:
+            n = self.N if n is None else int(n)
+            prep = self._prepare_system(np.eye(n), np.zeros(n))
+            slotNs.add(prep.slotN)
+        slots = []
+        k = 1
+        while k < max(1, int(max_batch)):
+            slots.append(k)
+            k *= 2
+        slots.append(k)  # _next_pow2(max_batch): the full-drain slot
+        dtype = np.dtype(self.config.dtype)
+        warmed = 0
+        for slotN in sorted(slotNs):
+            for slotB in slots:
+                bplan = self._batched_plan(slotB, slotN)
+                A = np.zeros((slotB, slotN, slotN), dtype)
+                A[:] = np.eye(slotN, dtype=dtype)
+                fact = bplan.execute(A)
+                rhs = np.zeros((slotB, slotN), dtype)
+                if (fact.work_dtype is not None
+                        and np.dtype(fact.work_dtype) != fact.dtype):
+                    rhs = rhs.astype(np.float32 if fact.dtype.itemsize < 4
+                                     else fact.dtype, copy=False)
+                jax.block_until_ready(fact.solve(rhs))
+                warmed += 1
+        return warmed
+
     def flush_systems(self):
         """Factorize and solve every pending system, one batch per N slot.
 
@@ -310,6 +382,7 @@ class SolveEngine:
             dtype = np.dtype(self.config.dtype)
             t0 = time.perf_counter()
             flushed = []  # (k, slotB, slotN) per bucket, applied on success
+            refined = []  # (systems, iters, nonconverged) per refining bucket
             for slotN, items in sorted(buckets.items()):
                 k = len(items)
                 slotB = self._slot(k)
@@ -321,9 +394,51 @@ class SolveEngine:
                 A[k:] = np.eye(slotN, dtype=dtype)  # identity pad systems
                 bplan = self._batched_plan(slotB, slotN)
                 fact = bplan.execute(A)
-                X = np.asarray(jax.block_until_ready(fact.solve(rhs)))
+                # Pre-cast the RHS to the plain solve's arithmetic dtype on
+                # mixed-precision engines: the downcast is the engine's own
+                # contract (refine_tol is the per-request escape hatch), so
+                # the intent-mismatch warning Factorization.solve raises for
+                # interactive callers would only be flush-loop noise here.
+                if (fact.work_dtype is not None
+                        and np.dtype(fact.work_dtype) != fact.dtype):
+                    sdt = (np.float32 if fact.dtype.itemsize < 4
+                           else fact.dtype)
+                    rhs_in = rhs.astype(sdt, copy=False)
+                else:
+                    rhs_in = rhs
+                X = np.asarray(jax.block_until_ready(fact.solve(rhs_in)))
                 for j, (i, prep) in enumerate(items):
                     results[i] = X[j, :prep.n]
+                # Second pass: refinement on the lanes that asked for it.
+                # Lanes without refine_tol already hold the bit-identical
+                # plain solve; the refining lanes are index-selected into a
+                # sub-Factorization and run ONE batched refine program with
+                # per-lane tolerances.
+                ridx = [j for j, (_, prep) in enumerate(items)
+                        if prep.refine_tol is not None]
+                if ridx:
+                    sub = Factorization(
+                        F=np.asarray(fact.F)[ridx],
+                        rows=np.asarray(fact.rows)[ridx],
+                        strategy=fact.strategy, backend=fact.backend,
+                        kind=fact.kind,
+                        A_ref=np.asarray(fact.A_ref)[ridx],
+                        work_dtype=fact.work_dtype,
+                    )
+                    tols = np.asarray(
+                        [items[j][1].refine_tol for j in ridx], np.float64
+                    )
+                    cap = max(items[j][1].max_refine_iters for j in ridx)
+                    rs = sub.solve(rhs[ridx], refine_tol=tols,
+                                   max_refine_iters=cap)
+                    Xr = np.asarray(rs.x)
+                    iters = np.atleast_1d(rs.refinement_iters)
+                    conv = np.atleast_1d(rs.converged)
+                    for pos, j in enumerate(ridx):
+                        i, prep = items[j]
+                        results[i] = Xr[pos, :prep.n]
+                    refined.append((len(ridx), int(iters.sum()),
+                                    int(len(conv) - conv.sum())))
                 flushed.append((k, slotB, slotN))
             self._t_batch += time.perf_counter() - t0
             self._pending_systems = []
@@ -332,6 +447,10 @@ class SolveEngine:
                 self._n_batched_systems += k
                 self._n_batch_pad += slotB - k
                 self._cells_batched += slotB * slotN * slotN
+            for systems, iters, nonconv in refined:
+                self._n_refined += systems
+                self._n_refine_iters += iters
+                self._n_refine_nonconverged += nonconv
             self._cells_useful += sum(p.n * p.n for p in pending)
         return results
 
@@ -362,6 +481,9 @@ class SolveEngine:
                 "batched_factorizations": self._n_batched_factor,
                 "batched_systems": self._n_batched_systems,
                 "batch_pad_systems": self._n_batch_pad,
+                "refined_systems": self._n_refined,
+                "refine_iters_total": self._n_refine_iters,
+                "refine_nonconverged": self._n_refine_nonconverged,
                 # fraction of batched compute cells spent on padding (both
                 # the identity fill systems and the ragged-N identity tails)
                 "batch_pad_waste": round(waste, 6),

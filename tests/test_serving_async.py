@@ -379,7 +379,7 @@ class TestModuleSurface:
 
 
 class TestServingSchema:
-    """The v6 serving section validator + smoke gate (pure-dict tests)."""
+    """The v7 serving section validator + smoke gate (pure-dict tests)."""
 
     def _section(self, ratio=2.5, fill=0.9):
         row = {"engine": "sync", "tenants": 4, "requests": 40, "wall_s": 1.0,
@@ -388,12 +388,36 @@ class TestServingSchema:
                "spill_rate": 0.0}
         arow = dict(row, engine="async", throughput_rps=100.0 * ratio,
                     batch_fill=fill)
-        return {"rows": [row, arow], "async_over_sync": ratio}
+        orow = {"engine": "sync", "arrival_rate_rps": 75.0,
+                "offered_rps": 75.0, "achieved_rps": 74.0,
+                "p50_ms": 2.0, "p95_ms": 5.0, "p99_ms": 9.0}
+        oarow = dict(orow, engine="async", p99_ms=3.0)
+        return {"rows": [row, arow], "async_over_sync": ratio,
+                "open_loop": {"arrival_rate_rps": 75.0, "seed": 0,
+                              "rows": [orow, oarow]}}
 
     def test_valid_section_passes(self):
         from benchmarks.run import validate_serving
 
         assert validate_serving(self._section(), mode="full") == []
+
+    def test_full_mode_requires_open_loop(self):
+        from benchmarks.run import validate_serving
+
+        sec = self._section()
+        del sec["open_loop"]
+        assert any("open_loop" in e for e in validate_serving(sec, mode="full"))
+        # smoke runs may omit the open-loop phase entirely
+        assert validate_serving(sec, mode="smoke") == []
+        # but a present section is validated in either mode
+        sec = self._section()
+        del sec["open_loop"]["rows"][1]["p99_ms"]
+        assert any("open_loop.rows[1]" in e
+                   for e in validate_serving(sec, mode="smoke"))
+        sec = self._section()
+        sec["open_loop"]["rows"] = [sec["open_loop"]["rows"][0]]
+        assert any("both disciplines" in e
+                   for e in validate_serving(sec, mode="full"))
 
     def test_full_mode_enforces_speedup_floor(self):
         from benchmarks.run import validate_serving
