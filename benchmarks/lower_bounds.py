@@ -3,7 +3,6 @@ bounds for LU / MMM across (N, P, M), plus the COnfLUX-to-bound ratio."""
 
 from __future__ import annotations
 
-import math
 import time
 
 from repro.core.lu.cost_models import conflux_model

@@ -1,10 +1,16 @@
 """EXPERIMENTS.md §Roofline: render the dry-run results JSON as the per-cell
-three-term roofline table (single-pod mesh, per the assignment)."""
+three-term roofline table (single-pod mesh, per the assignment).
+
+``--smoke`` skips the on-disk results and pushes one synthetic cell through
+the full `repro.analysis.roofline` pipeline (roofline -> row -> CSV +
+markdown table) so CI exercises the rendering path without a dry run.
+"""
 
 from __future__ import annotations
 
 import json
 import os
+import sys
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.json")
 
@@ -35,8 +41,22 @@ def rows(path=RESULTS, mesh="16x16"):
     return out
 
 
-def main(csv: bool = True):
-    rs = rows()
+def smoke_rows():
+    """One synthetic compute-bound cell through the real roofline pipeline."""
+    from repro.analysis.roofline import roofline
+
+    r = roofline(
+        arch="smoke", shape="train", mesh="16x16",
+        hlo_flops=1e15, hlo_bytes=1e12, collective_bytes=1e11,
+        model_flops=8e14,
+    )
+    row = r.row()
+    row["temp_gb"] = 0.0
+    return [row]
+
+
+def main(csv: bool = True, smoke: bool = False):
+    rs = smoke_rows() if smoke else rows()
     if csv:
         print("arch,shape,t_compute_s,t_memory_s,t_collective_s,bottleneck,"
               "flops_ratio,roofline_fraction,temp_gb")
@@ -46,8 +66,12 @@ def main(csv: bool = True):
                   f"{r['flops_ratio']:.3f},{r['roofline_fraction']:.4f},{r['temp_gb']:.1f}")
         if not rs:
             print("# (run PYTHONPATH=src python -m repro.launch.dryrun first)")
+    if smoke:
+        from repro.analysis.roofline import format_table
+
+        print(format_table(rs))
     return rs
 
 
 if __name__ == "__main__":
-    main()
+    main(smoke="--smoke" in sys.argv)

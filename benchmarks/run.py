@@ -24,7 +24,11 @@ end-to-end wall ratio), and the ``serving`` section (async-vs-sync serving
 throughput and batch-fill from ``benchmarks.serve_load``): the serving /
 batched ratios regress when they *drop* past tolerance.  ``--validate``
 checks the full-run JSON (``--validate --smoke`` the smoke one) against
-schema v7 — including the acceptance floors that the ref B=128, N=32
+schema v8 — requiring the ``audit`` section (static comm-conformance rows
+from ``repro.analysis.audit``: HLO-extracted vs model-predicted vs
+X-partitioning-lower-bound bytes per strategy x backend, zero
+error-severity findings, every row within the stated tolerance) — and
+including the acceptance floors that the ref B=128, N=32
 batched execute beats a Python loop of single executes by >= 3x, that the
 async serving tier beats the per-request sync baseline by >= 2x at
 saturating load, that refined mixed-precision solves converge to within
@@ -39,6 +43,7 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
 import sys
 import time
 
@@ -48,7 +53,7 @@ BENCH_SMOKE_JSON = os.path.join(_ROOT, "BENCH_lu.smoke.json")
 
 from benchmarks.serve_load import SERVING_MIN_SPEEDUP
 
-SCHEMA = "BENCH_lu.v7"
+SCHEMA = "BENCH_lu.v8"
 _MEASURED_KEYS = {
     "strategy", "backend", "N", "grid", "wall_us_per_call", "reconstruction_err",
     "solve_err", "comm_per_proc_elements", "comm_per_proc_bytes",
@@ -76,6 +81,13 @@ _MIXED_KEYS = {"config", "N", "v", "dtype", "compute_dtype", "backend",
                "wall_us", "residual", "refinement_iters", "converged",
                "refined_over_direct"}
 _MIXED_CONFIGS = {"f64_ref_direct", "f32_refined", "bf16_refined"}
+# Schema v8: the static audit's comm-conformance rows (repro.analysis.audit)
+# — HLO-extracted vs model-predicted vs X-partitioning-lower-bound bytes per
+# strategy x backend, plus the audit's own finding counts.
+_AUDIT_ROW_KEYS = {"strategy", "backend", "hotloop", "pivot", "compute_dtype",
+                   "N", "grid", "extracted_bytes", "predicted_bytes",
+                   "schedule_bytes", "lower_bound_bytes"}
+_AUDIT_STRATEGIES = ("conflux", "baseline2d", "cholesky25d")
 # Full-run acceptance floors for the mixed_precision section: the refined
 # low-precision pipelines must land within this factor of the f64 direct
 # solve's residual (working-precision quality recovered by refinement) ...
@@ -99,6 +111,28 @@ SMOKE_GATE_TOLERANCE = 2.0
 
 def _section(title):
     print(f"\n### {title}")
+
+
+def _audit_section(timeout: int = 900) -> dict:
+    """`bench_audit_rows()` in a subprocess: the distributed combos need the
+    8 host devices pinned before jax initializes (same pattern as
+    lu_measured's worker)."""
+    src = os.path.abspath(os.path.join(_ROOT, "src"))
+    code = (
+        "import os, sys, json\n"
+        "os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'\n"
+        f"sys.path.insert(0, {src!r})\n"
+        "from repro.analysis.audit import bench_audit_rows\n"
+        "print('AUDIT_JSON:' + json.dumps(bench_audit_rows()))\n"
+    )
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise RuntimeError(f"audit subprocess failed:\n{proc.stderr[-2000:]}")
+    for line in proc.stdout.splitlines():
+        if line.startswith("AUDIT_JSON:"):
+            return json.loads(line[len("AUDIT_JSON:"):])
+    raise RuntimeError("audit subprocess produced no AUDIT_JSON line")
 
 
 def validate_bench(path: str = BENCH_JSON, mode: str = "full") -> list[str]:
@@ -247,9 +281,60 @@ def validate_bench(path: str = BENCH_JSON, mode: str = "full") -> list[str]:
                       "from benchmarks.serve_load)")
     elif serving is not None:
         errors.extend(validate_serving(serving, mode=mode))
+    audit = bench.get("audit")
+    if measured and not audit:
+        errors.append("missing section: audit (static comm-conformance rows "
+                      "from repro.analysis.audit)")
+    elif audit is not None:
+        errors.extend(validate_audit(audit))
     cache = bench.get("plan_cache")
     if not isinstance(cache, dict) or not _CACHE_KEYS <= set(cache):
         errors.append(f"plan_cache must carry {sorted(_CACHE_KEYS)}, got {cache}")
+    return errors
+
+
+def validate_audit(audit) -> list[str]:
+    """Schema check for the v8 `audit` section: distributed rows must cover
+    every strategy x backend, carry the predicted/extracted/lower-bound byte
+    triple, conform to the stated tolerance, and the audit itself must have
+    run error-free."""
+    errors: list[str] = []
+    if not isinstance(audit, dict):
+        return [f"audit must be a dict section, got {type(audit).__name__}"]
+    rows = audit.get("rows")
+    if not isinstance(rows, list) or not rows:
+        return ["audit.rows must be a non-empty list of records"]
+    tolerance = audit.get("tolerance")
+    if not isinstance(tolerance, (int, float)):
+        errors.append(f"audit.tolerance must be a number, got {tolerance!r}")
+    combos = set()
+    for i, r in enumerate(rows):
+        missing = _AUDIT_ROW_KEYS - set(r)
+        if missing:
+            errors.append(f"audit.rows[{i}] missing keys: {sorted(missing)}")
+            continue
+        if not r["grid"]:
+            continue  # in-core rows: collective-free by construction
+        combos.add((r["strategy"], r["backend"]))
+        if not r["lower_bound_bytes"] > 0:
+            errors.append(
+                f"audit.rows[{i}] ({r['strategy']}/{r['backend']}): "
+                f"lower_bound_bytes must be positive, got {r['lower_bound_bytes']}")
+        if isinstance(tolerance, (int, float)) and not (
+                r.get("rel_err", 0.0) <= tolerance):
+            errors.append(
+                f"audit.rows[{i}] ({r['strategy']}/{r['backend']}): extracted "
+                f"{r['extracted_bytes']} vs predicted {r['predicted_bytes']} "
+                f"bytes (rel_err {r.get('rel_err')} > tolerance {tolerance})")
+    want = {(s, b) for s in _AUDIT_STRATEGIES for b in ("ref", "pallas")}
+    if not want <= combos:
+        errors.append(
+            f"audit.rows must cover {sorted(_AUDIT_STRATEGIES)} on both "
+            f"kernel backends, missing {sorted(want - combos)}")
+    if audit.get("errors"):
+        errors.append(
+            f"audit section reports {audit['errors']} error-severity "
+            f"finding(s); the static audit must pass clean")
     return errors
 
 
@@ -472,6 +557,16 @@ def main() -> None:
         from benchmarks import serve_load
 
         bench.update(serve_load.main(smoke=smoke))
+
+        # Static comm-conformance (schema v8): lowers every registered combo
+        # without executing and compares HLO-extracted collective bytes with
+        # the executed-schedule model + X-partitioning lower bound.
+        _section("Static audit: comm-conformance of lowered HLO (v8)")
+        t0 = time.perf_counter()
+        bench["audit"] = _audit_section()
+        print(f"# audit: {len(bench['audit']['rows'])} rows, "
+              f"{bench['audit']['errors']} error(s) in "
+              f"{time.perf_counter()-t0:.1f}s")
 
     if not smoke:
         _section("Roofline table (from dry-run results, single pod)")

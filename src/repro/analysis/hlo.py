@@ -72,6 +72,9 @@ class _Computation:
     order: list[str] = field(default_factory=list)
 
 
+_KNOWN_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+
+
 _COMP_HDR = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
 # Lazy type match: tuple types may contain /*index=N*/ comments; the op kind
 # is the first bare `word(` after the type expression.
@@ -254,11 +257,39 @@ def _entry_name(text: str, comps: dict[str, _Computation]) -> str:
     return next(iter(comps))
 
 
+def _while_trips(
+    comps: dict[str, _Computation], op: _Op, body_name: str, default_trip: int
+) -> int:
+    """Trip count of a `while` op: prefer XLA's own loop analysis, which
+    annotates the op with backend_config={"known_trip_count":{"n":"8"}} after
+    SPMD partitioning; fall back to parsing the condition computation."""
+    m = _KNOWN_TRIP_RE.search(op.line)
+    if m:
+        return max(int(m.group(1)), 1)
+    condm = re.search(r"condition=%?([\w.\-]+)", op.line)
+    if condm and condm.group(1) in comps:
+        return _trip_count(comps[condm.group(1)], comps.get(body_name), default_trip)
+    return default_trip
+
+
 def _compute_multipliers(
-    comps: dict[str, _Computation], entry: str, default_trip: int
+    comps: dict[str, _Computation],
+    entry: str,
+    default_trip: int,
+    branch_weights: dict[int, tuple[float, ...]] | None = None,
 ) -> dict[str, float]:
     """Execution multiplier per computation: sum over call sites of caller
-    multiplier x (trip count for while bodies, 1 otherwise)."""
+    multiplier x (trip count for while bodies, 1 otherwise).
+
+    branch_weights: optional {n_branches: (w_0, ..., w_{n-1})} map.  A
+    `conditional` op with exactly `n_branches` branch computations weights
+    branch i by w_i instead of charging every branch the full caller
+    multiplier.  This is how `lax.switch`-bucketed loop bodies (the windowed
+    hot loops) are costed: the caller knows the per-bucket execution fractions
+    statically and passes them in.  Conditionals whose branch count has no
+    entry keep the conservative every-branch-every-time behaviour.
+    """
+    branch_weights = branch_weights or {}
     mult: dict[str, float] = defaultdict(float)
     mult[entry] = 1.0
     # Topological-ish fixpoint (call graphs are DAGs; few dozen comps).
@@ -272,22 +303,35 @@ def _compute_multipliers(
                 continue
             for opn in comp.order:
                 op = comp.ops[opn]
+                branches = [c for rel, c in _callees(op) if rel == "branch"]
+                weights = branch_weights.get(len(branches))
                 for rel, callee in _callees(op):
-                    if callee not in comps:
+                    if callee not in comps or rel == "branch":
                         continue
                     if rel == "body":
-                        condm = re.search(r"condition=%?([\w.\-]+)", op.line)
-                        trips = _trip_count(
-                            comps[condm.group(1)], comps[callee], default_trip
-                        ) if (condm and condm.group(1) in comps) else default_trip
-                        new[callee] += base * trips
+                        new[callee] += base * _while_trips(
+                            comps, op, callee, default_trip
+                        )
                     elif rel == "condition":
                         bodym = re.search(r"body=%?([\w.\-]+)", op.line)
                         body_c = comps.get(bodym.group(1)) if bodym else None
-                        new[callee] += base * (_trip_count(comps[callee], body_c,
-                                                           default_trip) + 1)
+                        m = _KNOWN_TRIP_RE.search(op.line)
+                        trips = (
+                            max(int(m.group(1)), 1) if m
+                            else _trip_count(comps[callee], body_c, default_trip)
+                        )
+                        new[callee] += base * (trips + 1)
                     else:
                         new[callee] += base
+                for i, callee in enumerate(branches):
+                    if callee not in comps:
+                        continue
+                    w = (
+                        weights[i]
+                        if weights is not None and i < len(weights)
+                        else 1.0
+                    )
+                    new[callee] += base * w
         for k, v in new.items():
             if abs(mult.get(k, 0.0) - v) > 1e-9:
                 changed = True
@@ -297,10 +341,34 @@ def _compute_multipliers(
     return dict(mult)
 
 
-def _collective_wire_bytes(op: _Op) -> tuple[float, float, int]:
+def _async_payload_type(comp: _Computation, op: _Op) -> str:
+    """Result type of an async collective pair, counted once per pair.
+
+    An `all-gather-start` / `collective-permute-start` op's own out_type is a
+    tuple carrying *both* the aliased operand buffer and the result (e.g.
+    `(f32[8,128], f32[64,128])`), so summing its tuple elements double-counts
+    the transfer.  The matching `-done` op's out_type is the bare result
+    shape — prefer it, falling back to the last array element of the start
+    tuple when the done op is missing (truncated dumps)."""
+    for other_name in comp.order:
+        other = comp.ops[other_name]
+        if other.kind == op.kind[: -len("start")] + "done" and op.name in other.operands:
+            return other.out_type
+    if op.out_type.lstrip().startswith("("):
+        shapes = _SHAPE_RE.findall(op.out_type)
+        arrays = [f"{dt}[{dims}]" for dt, dims in shapes if _DTYPE_BYTES.get(dt, 0)]
+        if arrays:
+            return arrays[-1]
+    return op.out_type
+
+
+def _collective_wire_bytes(op: _Op, comp: _Computation | None = None) -> tuple[float, float, int]:
     """(payload, per-participant wire bytes, group size) for a collective op."""
     g = _group_size(op.line)
-    out_b = _shape_bytes(op.out_type)
+    if op.kind.endswith("-start") and comp is not None:
+        out_b = _shape_bytes(_async_payload_type(comp, op))
+    else:
+        out_b = _shape_bytes(op.out_type)
     if op.kind.startswith("all-gather"):
         payload = out_b
         wire = out_b * (g - 1) / max(g, 1)
@@ -417,13 +485,23 @@ def _dot_flops_of(comp: _Computation, op: _Op) -> float:
     return 2.0 * math.prod(out_dims) * k
 
 
-def analyze_hlo(text: str, default_trip: int = 1) -> HloReport:
-    """Parse optimized HLO text into trip-aware per-device cost terms."""
+def analyze_hlo(
+    text: str,
+    default_trip: int = 1,
+    branch_weights: dict[int, tuple[float, ...]] | None = None,
+) -> HloReport:
+    """Parse optimized HLO text into trip-aware per-device cost terms.
+
+    branch_weights: optional {n_branches: per-branch execution fractions} for
+    `conditional` ops (see `_compute_multipliers`) — lets callers that know
+    the `lax.switch` bucket schedule statically weight each branch by how
+    often it actually runs instead of charging all branches every iteration.
+    """
     comps = _parse_computations(text)
     if not comps:
         return HloReport(0.0, {}, 0.0, 0.0, [], {}, "")
     entry = _entry_name(text, comps)
-    mult = _compute_multipliers(comps, entry, default_trip)
+    mult = _compute_multipliers(comps, entry, default_trip, branch_weights)
 
     # Computations only ever referenced as fusion/reduce bodies execute in
     # registers: exclude them from bytes-accessed (but keep their dots).
@@ -452,7 +530,7 @@ def analyze_hlo(text: str, default_trip: int = 1) -> HloReport:
             if op.kind.endswith("-done"):
                 continue  # counted at the -start op
             if base_kind in _COLLECTIVES:
-                payload, wire, g = _collective_wire_bytes(op)
+                payload, wire, g = _collective_wire_bytes(op, comp)
                 site = CollectiveSite(
                     kind=base_kind, computation=cname, payload_bytes=payload,
                     wire_bytes=wire, group_size=g, multiplier=m, op_name=op.name,

@@ -12,7 +12,8 @@
 
 Strategies plug in through `@register_strategy("name")` — see
 `repro.api.strategies` for the built-ins (sequential / conflux /
-baseline2d / auto for LU; sequential_chol / cholesky25d for SPD).  Local compute routes through a `KernelBackend`
+baseline2d / auto for LU; sequential_chol / cholesky25d for SPD).  Local
+compute routes through a `KernelBackend`
 (`SolverConfig.backend`: "ref" jnp paths or "pallas" MXU-tiled kernels).
 Plans are cached by (N, dtype, strategy, pivot, grid, v, backend,
 compute_dtype) in an LRU-bounded cache — a low-precision

@@ -60,6 +60,44 @@ class FactorizationPlan:
         # concurrent executes and skew the re-trace accounting.
         self._count_lock = threading.Lock()
         self._run = run  # (A: np.ndarray [N, N]) -> (F, rows); set by the builder
+        # Set by the builders for static analysis (repro.analysis.audit):
+        # the jitted callable and the abstract input it is traced with.
+        self._fn = None
+        self._in_avals: tuple | None = None
+        self._lowered_obj = None
+        self._lowered_cache: dict[str, str] = {}
+
+    def lowered_text(self, stage: str = "stablehlo") -> str:
+        """The plan's program text, without executing it.
+
+        stage="stablehlo": the pre-optimization StableHLO module (cheap — one
+        trace, no XLA compile).  stage="hlo": the optimized *per-device* HLO
+        after SPMD partitioning (compiles the program; still never runs it) —
+        the input `repro.analysis.hlo.analyze_hlo` expects.
+
+        Lowering traces the program (bumping `trace_count` once); the trace
+        is shared with the execute path's jit cache, so auditing a plan never
+        adds a second trace.  Results are cached per stage on the plan.
+        """
+        if stage not in ("stablehlo", "hlo"):
+            raise ValueError(f"stage must be 'stablehlo' or 'hlo', got {stage!r}")
+        if self._fn is None or self._in_avals is None:
+            raise RuntimeError(
+                f"plan for strategy {self.config.strategy!r} does not expose its "
+                f"traced program (builder did not set _fn/_in_avals)"
+            )
+        cached = self._lowered_cache.get(stage)
+        if cached is None:
+            lowered = self._lowered_obj
+            if lowered is None:
+                lowered = self._fn.lower(*self._in_avals)
+                self._lowered_obj = lowered  # one trace serves both stages
+            cached = (
+                lowered.as_text() if stage == "stablehlo"
+                else lowered.compile().as_text()
+            )
+            self._lowered_cache[stage] = cached
+        return cached
 
     def _note_trace(self):
         """Called from inside the traced program: fires once per compile."""

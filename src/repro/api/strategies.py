@@ -14,10 +14,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.config import SolverConfig
+from repro.api.config import SolverConfig, resolve_dtype
 from repro.api.plan import FactorizationPlan
 from repro.api.registry import register_strategy
 from repro.core.lu.grid import optimize_grid, validate_layout
+
+
+def _compute_aval(shape: tuple[int, ...], config: SolverConfig):
+    """Abstract input for static lowering: the traced programs see the
+    matrix (or its block-cyclic shards) already cast to the compute dtype."""
+    return jax.ShapeDtypeStruct(shape, resolve_dtype(config.effective_compute_dtype))
 
 # ---------------------------------------------------------------------------
 # sequential — single-device masked LU (the jnp oracle).
@@ -73,6 +79,9 @@ def build_sequential(N: int, config: SolverConfig, mesh=None) -> FactorizationPl
         return np.asarray(F), np.asarray(rows).astype(np.int64)
 
     p._run = run
+    p._fn = fn
+    shape = (N, N) if config.B is None else (config.B, N, N)
+    p._in_avals = (_compute_aval(shape, config),)
     return p
 
 
@@ -105,6 +114,12 @@ def _resolve_conflux(N: int, config: SolverConfig) -> SolverConfig:
     P_target = config.P_target or len(jax.devices())
     grid = optimize_grid(N, P_target, config.M, v=config.v)
     return config.with_(grid=grid)
+
+
+def _blocks_shape(N: int, grid) -> tuple[int, int, int, int]:
+    """Shape of the block-cyclic scatter output fed to the shard_map plans."""
+    nbi = N // grid.v
+    return (grid.Px, grid.Py, (nbi // grid.Px) * grid.v, (nbi // grid.Py) * grid.v)
 
 
 def _shard_map(f, mesh, in_specs, out_specs):
@@ -162,6 +177,8 @@ def _build_shardmap_plan(N: int, config: SolverConfig, mesh=None) -> Factorizati
         return F, np.asarray(rows).astype(np.int64)
 
     p._run = run
+    p._fn = fn
+    p._in_avals = (_compute_aval(_blocks_shape(N, grid), config),)
     return p
 
 
@@ -249,6 +266,9 @@ def build_sequential_chol(N: int, config: SolverConfig, mesh=None) -> Factorizat
         return np.asarray(L), np.arange(N, dtype=np.int64)
 
     p._run = run
+    p._fn = fn
+    shape = (N, N) if config.B is None else (config.B, N, N)
+    p._in_avals = (_compute_aval(shape, config),)
     return p
 
 
@@ -309,6 +329,8 @@ def build_cholesky25d(N: int, config: SolverConfig, mesh=None) -> FactorizationP
         return L, np.arange(N, dtype=np.int64)
 
     p._run = run
+    p._fn = fn
+    p._in_avals = (_compute_aval(_blocks_shape(N, grid), config),)
     return p
 
 

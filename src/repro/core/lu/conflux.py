@@ -40,7 +40,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.result import Factorization
 from repro.core.lu.cost_models import conflux_model
 from repro.core.lu.grid import GridConfig
 from repro.core.windows import window_bucket_index, window_buckets

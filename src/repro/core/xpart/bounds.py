@@ -195,7 +195,8 @@ def max_computational_intensity(
         rho = 1.0 / u
         q = n * u  # each vertex consumes u out-degree-1 inputs: no X slack needed
         clamped = True
-    return IntensityResult(rho=rho, X0=X0, psi0=p0, bound=max(q, 0.0), clamped_by_out_degree_one=clamped)
+    return IntensityResult(rho=rho, X0=X0, psi0=p0, bound=max(q, 0.0),
+                           clamped_by_out_degree_one=clamped)
 
 
 def sequential_io_lower_bound(stmt: Statement, M: float, **kw) -> float:

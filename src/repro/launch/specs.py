@@ -13,7 +13,6 @@ import jax.numpy as jnp
 
 from repro.configs import SHAPES
 from repro.models.config import ModelConfig
-from repro.models import transformer as T
 from repro.parallel.sharding import ShardingRules, batch_pspecs, tree_pspecs
 from repro.training.optimizer import OptConfig, init_opt_state
 from repro.training.train_step import TrainState

@@ -9,7 +9,7 @@ of `len(pattern)` layers with identical parameter structure per group.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

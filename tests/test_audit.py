@@ -1,0 +1,405 @@
+"""Plan auditor: executed-model constants, clean passes on the real kernels,
+and seeded-violation mutation tests proving every checker actually fires.
+
+The distributed combos (comm-conformance + mesh-uniformity on genuine 2x2x2
+grids) run in a subprocess — see `multidev/run_audit_8dev.py` — because the
+host device count must be pinned before jax initializes.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.experimental import pallas as pl
+
+from repro.analysis.audit import (
+    AuditReport,
+    branch_weights_for,
+    check_cache_keys,
+    check_comm_conformance,
+    check_kernels,
+    check_mesh_uniformity,
+    executed_comm_bytes,
+    lint_pallas_fn,
+    run_audit,
+)
+from repro.analysis.audit import main as audit_main
+from repro.api import SolverConfig, plan
+from repro.core.lu.grid import GridConfig
+
+HERE = os.path.dirname(__file__)
+
+
+# ---------------------------------------------------------------------------
+# Executed-schedule model: constants verified against the lowered HLO of the
+# XLA pinned in this container (rel err 0.0 in the 8-device audit).
+# ---------------------------------------------------------------------------
+
+
+class TestExecutedModel:
+    @pytest.mark.parametrize(
+        "kind,grid,pivot,hotloop,want",
+        [
+            ("lu", (2, 2, 2), "tournament", "windowed", 29440.0),
+            ("lu", (2, 2, 2), "tournament", "flat", 33280.0),
+            ("cholesky", (2, 2, 2), "none", "windowed", 22784.0),
+            ("cholesky", (2, 2, 2), "none", "flat", 31744.0),
+            ("lu", (2, 2, 1), "partial", "windowed", 18688.0),
+            ("lu", (2, 2, 1), "partial", "flat", 21248.0),
+            ("lu", (4, 2, 1), "tournament", "windowed", 19456.0),
+        ],
+    )
+    def test_verified_wire_bytes(self, kind, grid, pivot, hotloop, want):
+        g = GridConfig(*grid, 8, 64)
+        out = executed_comm_bytes(kind, 64, g, pivot, hotloop, 4)
+        assert out["total"] == want
+
+    def test_breakdown_sums_to_total(self):
+        g = GridConfig(2, 2, 2, 8, 64)
+        out = executed_comm_bytes("lu", 64, g, "tournament", "windowed", 4)
+        parts = sum(v for k, v in out.items() if k != "total")
+        assert out["total"] == pytest.approx(parts)
+
+    def test_windowed_moves_less_than_flat(self):
+        g = GridConfig(2, 2, 2, 8, 64)
+        for kind, pivot in (("lu", "tournament"), ("cholesky", "none")):
+            win = executed_comm_bytes(kind, 64, g, pivot, "windowed", 4)["total"]
+            flat = executed_comm_bytes(kind, 64, g, pivot, "flat", 4)["total"]
+            assert win < flat
+
+    def test_sub4_byte_dtypes_move_f32_partials(self):
+        """bf16 compute keeps f32-sized collectives (kernels accumulate in
+        f32), so the wire bytes are identical to the f32 plan's."""
+        g = GridConfig(2, 2, 2, 8, 64)
+        f32 = executed_comm_bytes("lu", 64, g, "tournament", "windowed", 4)
+        bf16 = executed_comm_bytes("lu", 64, g, "tournament", "windowed", 2)
+        assert f32 == bf16
+
+    def test_branch_weights(self):
+        # nsteps=8 -> buckets [1,2,4,8] run [1,1,2,4] of the 8 steps.
+        assert branch_weights_for(64, 8, "windowed") == {
+            4: (0.125, 0.125, 0.25, 0.5)
+        }
+        assert branch_weights_for(64, 8, "flat") == {}
+        for weights in branch_weights_for(256, 8, "windowed").values():
+            assert sum(weights) == pytest.approx(1.0)
+
+
+class TestAuditReport:
+    def test_counts_and_severity_validation(self):
+        rep = AuditReport()
+        rep.add("r", "error", "loc", "boom")
+        rep.add("r", "info", "loc", "fine", {"x": 1})
+        assert len(rep.errors) == 1 and not rep.warnings
+        js = rep.to_json()
+        assert js["counts"] == {"error": 1, "warning": 0, "info": 1}
+        assert js["findings"][1]["data"] == {"x": 1}
+        with pytest.raises(ValueError):
+            rep.add("r", "fatal", "loc", "bad severity")
+
+
+# ---------------------------------------------------------------------------
+# comm-conformance: in-core plans must lower with zero collectives; the
+# error path fires on a seeded collective-bearing "sequential" plan.
+# ---------------------------------------------------------------------------
+
+
+class _StubPlan:
+    """A fake in-core plan whose lowered HLO smuggles in a collective."""
+
+    def __init__(self, text):
+        self.N = 32
+        self.config = SolverConfig(strategy="sequential", v=8)
+        self.grid = None
+        self.kind = "lu"
+        self.comm = {}
+        self._text = text
+
+    def lowered_text(self, stage="stablehlo"):
+        return self._text
+
+
+_SEEDED_COLLECTIVE_HLO = """
+HloModule leaky
+
+ENTRY %main (x: f32[32,32]) -> f32[32,32] {
+  %x = f32[32,32]{1,0} parameter(0)
+  ROOT %ar = f32[32,32]{1,0} all-reduce(%x), replica_groups=[1,8]<=[8]
+}
+"""
+
+
+class TestCommConformance:
+    def test_sequential_plan_has_zero_collectives(self):
+        p = plan(32, SolverConfig(strategy="sequential", v=8))
+        findings, row = check_comm_conformance(p)
+        assert not [f for f in findings if f.severity == "error"]
+        assert row["extracted_bytes"] == 0.0
+        assert row["grid"] is None and row["predicted_bytes"] == 0.0
+
+    def test_mutation_incore_collective_fires_error(self):
+        findings, row = check_comm_conformance(_StubPlan(_SEEDED_COLLECTIVE_HLO))
+        errs = [f for f in findings if f.severity == "error"]
+        assert len(errs) == 1 and errs[0].rule == "comm-conformance"
+        assert "must not communicate" in errs[0].detail
+        assert row["extracted_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# mesh-uniformity: hand-written conditionals with uniform / divergent /
+# shape-only-divergent branch collectives.
+# ---------------------------------------------------------------------------
+
+
+def _mesh_hlo(b0_op, b1_op, b0_shape="f32[8]", b1_shape="f32[8]",
+              b0_groups="[2,4]<=[8]", b1_groups="[2,4]<=[8]"):
+    return f"""
+HloModule mesh
+
+%b0 (p0: f32[8]) -> {b0_shape} {{
+  %p0 = f32[8]{{0}} parameter(0)
+  ROOT %c0 = {b0_shape} {b0_op}(%p0), replica_groups={b0_groups}
+}}
+
+%b1 (p1: f32[8]) -> {b1_shape} {{
+  %p1 = f32[8]{{0}} parameter(0)
+  ROOT %c1 = {b1_shape} {b1_op}(%p1), replica_groups={b1_groups}
+}}
+
+ENTRY %main (i: s32[], x: f32[8]) -> f32[8] {{
+  %i = s32[] parameter(0)
+  %x = f32[8]{{0}} parameter(1)
+  ROOT %c = f32[8]{{0}} conditional(%i, %x, %x), branch_computations={{%b0, %b1}}
+}}
+"""
+
+
+class TestMeshUniformity:
+    def test_uniform_branches_pass(self):
+        findings = check_mesh_uniformity(
+            _mesh_hlo("all-reduce", "all-reduce"), "t")
+        assert not [f for f in findings if f.severity == "error"]
+        assert any("uniform across" in f.detail for f in findings)
+
+    def test_mutation_divergent_op_kinds_deadlock(self):
+        findings = check_mesh_uniformity(
+            _mesh_hlo("all-reduce", "all-gather"), "t")
+        errs = [f for f in findings if f.severity == "error"]
+        assert len(errs) == 1 and errs[0].rule == "mesh-uniformity"
+        assert "deadlock" in errs[0].detail
+
+    def test_mutation_divergent_replica_groups_deadlock(self):
+        findings = check_mesh_uniformity(
+            _mesh_hlo("all-reduce", "all-reduce", b1_groups="[4,2]<=[8]"), "t")
+        assert [f for f in findings if f.severity == "error"]
+
+    def test_shape_only_divergence_is_window_design_info(self):
+        findings = check_mesh_uniformity(
+            _mesh_hlo("all-reduce", "all-reduce", b1_shape="f32[4]"), "t")
+        assert not [f for f in findings if f.severity == "error"]
+        assert any("window" in f.detail for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel lint: the repo's kernels pass; three deliberately broken
+# kernels trigger exactly the expected rules.
+# ---------------------------------------------------------------------------
+
+
+def _bad_divisibility(x):
+    """Block 48 does not tile the 96x100 operand's second dim."""
+    def kern(xr, outr):
+        outr[...] = xr[...] * 2.0
+
+    return pl.pallas_call(
+        kern,
+        grid=(2, 3),
+        in_specs=[pl.BlockSpec((48, 48), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((48, 48), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((96, 100), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _bad_accum(a, b):
+    """bf16 inputs fed to a dot that accumulates in bf16."""
+    def kern(ar, br, outr):
+        outr[...] = jnp.dot(ar[...], br[...])  # no preferred_element_type
+
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((64, 64), jnp.bfloat16),
+        interpret=True,
+    )(a, b)
+
+
+def _bad_vmem(x):
+    """2048x2048 f32 blocks, double-buffered: ~64 MiB against a 16 MiB core."""
+    def kern(xr, outr):
+        outr[...] = xr[...] + 1.0
+
+    return pl.pallas_call(
+        kern,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((2048, 2048), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((2048, 2048), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((4096, 2048), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+class TestKernelLint:
+    def test_real_kernels_pass_clean(self):
+        findings = check_kernels()
+        errs = [f for f in findings if f.severity == "error"]
+        assert not errs, [f"{f.location}: {f.detail}" for f in errs]
+        rules = {f.rule for f in findings}
+        assert "kernel-vmem" in rules  # per-call VMEM estimates reported
+        assert "kernel-accum" in rules  # bf16 sweep checked the f32 invariant
+
+    def test_mutation_divisibility_fires(self):
+        aval = jax.ShapeDtypeStruct((96, 100), jnp.float32)
+        findings = lint_pallas_fn(_bad_divisibility, [aval], "bad_div")
+        errs = [f for f in findings if f.severity == "error"]
+        assert errs and all(f.rule == "kernel-divisibility" for f in errs)
+        assert "does not tile" in errs[0].detail
+
+    def test_mutation_low_precision_accum_fires(self):
+        avals = [jax.ShapeDtypeStruct((64, 64), jnp.bfloat16)] * 2
+        findings = lint_pallas_fn(_bad_accum, avals, "bad_accum")
+        errs = [f for f in findings if f.severity == "error"]
+        assert errs and errs[0].rule == "kernel-accum"
+        assert "dot_general" in errs[0].detail
+
+    def test_mutation_vmem_budget_fires(self):
+        aval = jax.ShapeDtypeStruct((4096, 2048), jnp.float32)
+        findings = lint_pallas_fn(_bad_vmem, [aval], "bad_vmem")
+        errs = [f for f in findings if f.severity == "error"]
+        assert errs and errs[0].rule == "kernel-vmem"
+        assert errs[0].data["vmem_bytes"] > errs[0].data["budget"]
+
+    def test_vmem_budget_is_configurable(self):
+        aval = jax.ShapeDtypeStruct((4096, 2048), jnp.float32)
+        findings = lint_pallas_fn(_bad_vmem, [aval], "big_vmem",
+                                  vmem_budget=256 * 2**20)
+        assert not [f for f in findings if f.severity == "error"]
+
+    def test_no_pallas_call_is_a_warning(self):
+        findings = lint_pallas_fn(
+            lambda x: x + 1, [jax.ShapeDtypeStruct((8,), jnp.float32)], "plain")
+        assert [f for f in findings if f.severity == "warning"]
+
+
+# ---------------------------------------------------------------------------
+# cache-key completeness fuzzer: clean on the real key; a key with a dropped
+# field is flagged as aliasing.
+# ---------------------------------------------------------------------------
+
+
+class TestCacheKeyFuzzer:
+    def test_real_cache_key_has_no_aliasing(self):
+        findings = check_cache_keys(32, SolverConfig(strategy="sequential", v=8))
+        assert not [f for f in findings if f.severity == "error"]
+        assert any("no cache-key aliasing" in f.detail for f in findings)
+
+    def test_mutation_dropped_field_fires(self):
+        # A key of only (N, strategy, backend) forgets v (among others):
+        # v=8 vs v=16 lower to different programs under an unchanged key.
+        def key_missing_v(cfg, n):
+            return (n, cfg.strategy, cfg.backend)
+
+        findings = check_cache_keys(
+            32, SolverConfig(strategy="sequential", v=8), key_fn=key_missing_v)
+        errs = [f for f in findings if f.severity == "error"]
+        assert errs, [f.detail for f in findings]
+        assert any(f.data.get("field") == "v" for f in errs)
+        assert "share one plan-cache entry" in errs[0].detail
+
+
+# ---------------------------------------------------------------------------
+# Driver + CLI (single-device rules in-process; full matrix in subprocess).
+# ---------------------------------------------------------------------------
+
+
+class TestDriver:
+    def test_run_audit_warns_below_8_devices(self):
+        report = run_audit(rules={"cache-key"})
+        if len(jax.devices()) < 8:
+            assert any(f.location == "devices" for f in report.warnings)
+        assert not report.errors, [f.detail for f in report.errors]
+
+    def test_cli_json_report(self, tmp_path):
+        out = tmp_path / "audit.json"
+        rc = audit_main(["--rules", "cache-key", "--json", str(out)])
+        assert rc == 0
+        data = json.loads(out.read_text())
+        assert set(data) == {"findings", "counts", "comm_rows"}
+        assert data["counts"]["error"] == 0
+        assert data["findings"]
+
+    def test_cli_rejects_unknown_stage_via_plan_hook(self):
+        p = plan(32, SolverConfig(strategy="sequential", v=8))
+        with pytest.raises(ValueError):
+            p.lowered_text("mlir")
+        assert "module" in p.lowered_text("stablehlo")
+
+
+class TestBenchValidator:
+    """benchmarks/run.py --validate must require the v8 audit section."""
+
+    def _good_rows(self):
+        rows = []
+        for s in ("conflux", "baseline2d", "cholesky25d"):
+            for b in ("ref", "pallas"):
+                rows.append({
+                    "strategy": s, "backend": b, "hotloop": "windowed",
+                    "pivot": "tournament", "compute_dtype": "float32",
+                    "N": 64, "grid": "2x2x2", "extracted_bytes": 29440.0,
+                    "predicted_bytes": 29440.0, "schedule_bytes": 9856.0,
+                    "lower_bound_bytes": 1659.0, "rel_err": 0.0,
+                })
+        return rows
+
+    def test_complete_section_passes(self):
+        from benchmarks.run import validate_audit
+
+        audit = {"rows": self._good_rows(), "tolerance": 0.25,
+                 "errors": 0, "warnings": 0}
+        assert validate_audit(audit) == []
+
+    def test_missing_combo_and_error_findings_flagged(self):
+        from benchmarks.run import validate_audit
+
+        rows = [r for r in self._good_rows()
+                if (r["strategy"], r["backend"]) != ("cholesky25d", "pallas")]
+        errs = validate_audit({"rows": rows, "tolerance": 0.25, "errors": 2})
+        assert any("cholesky25d" in e for e in errs)
+        assert any("error-severity" in e for e in errs)
+
+    def test_out_of_tolerance_row_flagged(self):
+        from benchmarks.run import validate_audit
+
+        rows = self._good_rows()
+        rows[0]["rel_err"] = 0.9
+        errs = validate_audit({"rows": rows, "tolerance": 0.25, "errors": 0})
+        assert any("rel_err" in e for e in errs)
+
+
+@pytest.mark.slow
+def test_audit_8dev_subprocess():
+    """Full distributed audit: every strategy x backend x hotloop combo
+    lowers, the executed model matches the HLO exactly, the lower bound is
+    reported, and the error paths stay live (see the runner's asserts)."""
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "multidev", "run_audit_8dev.py")],
+        capture_output=True,
+        text=True,
+        timeout=900,
+        env={**os.environ, "PYTHONPATH": os.path.join(HERE, "..", "src")},
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}"
+    assert "ALL-OK" in proc.stdout

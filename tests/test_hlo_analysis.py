@@ -2,7 +2,6 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.analysis.hlo import analyze_hlo, _shape_bytes
@@ -31,7 +30,7 @@ HloModule test, entry_computation_layout={()->f32[]}
   %p = (s32[], f32[64,64]) parameter(0)
   %i = s32[] get-tuple-element(%p), index=0
   %x = f32[64,64]{1,0} get-tuple-element(%p), index=1
-  %all-gather.1 = f32[64,256]{1,0} all-gather(%x), channel_id=1, replica_groups=[2,4]<=[8], dimensions={1}
+  %all-gather.1 = f32[64,256]{1,0} all-gather(%x), replica_groups=[2,4]<=[8]
   %c1 = s32[] constant(1)
   %ip = s32[] add(%i, %c1)
   ROOT %t = (s32[], f32[64,64]) tuple(%ip, %x)
@@ -50,8 +49,8 @@ ENTRY %main (a: f32[64,64]) -> f32[] {
   %tup = (s32[], f32[64,64]) tuple(%c0, %a)
   %while.1 = (s32[], f32[64,64]) while(%tup), condition=%region_cond, body=%region_body
   %y = f32[64,64]{1,0} get-tuple-element(%while.1), index=1
-  %all-reduce.7 = f32[64,64]{1,0} all-reduce(%y), channel_id=2, replica_groups=[1,8]<=[8], to_apply=%region_cond
-  %dot.3 = f32[64,64]{1,0} dot(%y, %all-reduce.7), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %all-reduce.7 = f32[64,64]{1,0} all-reduce(%y), replica_groups=[1,8]<=[8]
+  %dot.3 = f32[64,64]{1,0} dot(%y, %all-reduce.7), lhs_contracting_dims={1}
   ROOT %r = f32[] reduce-window(%dot.3)
 }
 """
@@ -77,6 +76,104 @@ class TestCannedHlo:
     def test_dot_flops(self):
         rep = analyze_hlo(CANNED)
         assert rep.dot_flops == pytest.approx(2 * 64 * 64 * 64)
+
+
+ASYNC = """
+HloModule async_pairs
+
+ENTRY %main (x: f32[8,128]) -> f32[64,128] {
+  %x = f32[8,128]{1,0} parameter(0)
+  %ag-start = (f32[8,128], f32[64,128]) all-gather-start(%x), replica_groups=[1,8]<=[8]
+  %ag-done = f32[64,128]{1,0} all-gather-done(%ag-start)
+  %cp-start = (f32[64,128], f32[64,128]) collective-permute-start(%ag-done)
+  ROOT %cp-done = f32[64,128]{1,0} collective-permute-done(%cp-start)
+}
+"""
+
+
+class TestAsyncCollectivePairs:
+    """Regression: `-start`/`-done` pairs must be counted once, at the
+    *result* payload.  The start op's out_type is a tuple carrying both the
+    aliased operand buffer and the result, so summing its elements (the old
+    behaviour) double-counts the transfer."""
+
+    def test_pair_counted_once_at_result_payload(self):
+        rep = analyze_hlo(ASYNC)
+        assert len(rep.sites) == 2  # one site per pair, none for -done ops
+        ag = next(s for s in rep.sites if s.kind == "all-gather")
+        # result f32[64,128] only — not the (8,128)+(64,128) tuple sum
+        assert ag.payload_bytes == 64 * 128 * 4
+        assert ag.wire_bytes == pytest.approx(64 * 128 * 4 * 7 / 8)
+        cp = next(s for s in rep.sites if s.kind == "collective-permute")
+        assert cp.wire_bytes == 64 * 128 * 4  # ppermute wire = payload
+
+    def test_start_without_done_falls_back_to_tuple_result(self):
+        # Truncated dump: no -done op; the last array element of the start
+        # tuple is the result.
+        truncated = "\n".join(
+            line for line in ASYNC.splitlines()
+            if "done" not in line and "cp-start" not in line
+        ).replace("ROOT %cp", "ROOT %x2")
+        rep = analyze_hlo(truncated)
+        ag = next(s for s in rep.sites if s.kind == "all-gather")
+        assert ag.payload_bytes == 64 * 128 * 4
+
+
+class TestTripCountSources:
+    def test_known_trip_count_annotation_wins(self):
+        """XLA's loop analysis annotates `while` ops with known_trip_count;
+        it overrides the condition-computation parse (which says 10)."""
+        annotated = CANNED.replace(
+            "body=%region_body",
+            'body=%region_body, backend_config={"known_trip_count":{"n":"5"}}',
+        )
+        rep = analyze_hlo(annotated)
+        ag = [s for s in rep.sites if s.kind == "all-gather"]
+        assert ag[0].multiplier == 5
+
+
+BRANCHY = """
+HloModule branchy
+
+%wb0 (p0: f32[16]) -> f32[16] {
+  %p0 = f32[16]{0} parameter(0)
+  ROOT %ar0 = f32[16]{0} all-reduce(%p0), replica_groups=[1,4]<=[4]
+}
+
+%wb1 (p1: f32[16]) -> f32[16] {
+  %p1 = f32[16]{0} parameter(0)
+  ROOT %ar1 = f32[16]{0} all-reduce(%p1), replica_groups=[1,4]<=[4]
+}
+
+ENTRY %main (i: s32[], x: f32[16]) -> f32[16] {
+  %i = s32[] parameter(0)
+  %x = f32[16]{0} parameter(1)
+  ROOT %c = f32[16]{0} conditional(%i, %x, %x), branch_computations={%wb0, %wb1}
+}
+"""
+
+
+class TestBranchWeights:
+    """`lax.switch` bucket weighting: callers that know the per-bucket
+    execution fractions statically weight each branch instead of charging
+    every branch every iteration (the windowed hot-loop costing)."""
+
+    def test_unweighted_charges_every_branch(self):
+        rep = analyze_hlo(BRANCHY)
+        wire_one = 2 * 16 * 4 * 3 / 4  # ring all-reduce of f32[16] over g=4
+        assert rep.collective_wire_bytes == pytest.approx(2 * wire_one)
+
+    def test_branch_weights_scale_multipliers(self):
+        rep = analyze_hlo(BRANCHY, branch_weights={2: (0.25, 0.75)})
+        wire_one = 2 * 16 * 4 * 3 / 4
+        assert rep.multipliers["wb0"] == pytest.approx(0.25)
+        assert rep.multipliers["wb1"] == pytest.approx(0.75)
+        assert rep.collective_wire_bytes == pytest.approx(wire_one)
+
+    def test_mismatched_branch_count_keeps_conservative_costing(self):
+        rep = analyze_hlo(BRANCHY, branch_weights={4: (0.1, 0.2, 0.3, 0.4)})
+        wire_one = 2 * 16 * 4 * 3 / 4
+        assert rep.collective_wire_bytes == pytest.approx(2 * wire_one)
 
 
 class TestCompiledScan:

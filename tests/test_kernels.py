@@ -1,7 +1,6 @@
 """Pallas kernel sweeps: shapes x dtypes, allclose vs the ref.py oracles
 (interpret mode executes the kernel bodies on CPU)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

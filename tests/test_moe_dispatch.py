@@ -1,11 +1,8 @@
 """MoE routing: sort-based dispatch (shipped default) vs scatter baseline."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.models.config import LayerSpec, ModelConfig, MoEConfig

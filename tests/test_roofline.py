@@ -1,0 +1,121 @@
+"""analysis/roofline.py coverage: the three-term model on known numbers,
+table formatting, and the benchmarks/roofline_table.py integration path
+(both the on-disk results pipeline and --smoke mode)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis.roofline import (
+    TPU_V5E,
+    Hardware,
+    RooflineResult,
+    format_table,
+    roofline,
+)
+
+HERE = os.path.dirname(__file__)
+
+
+class TestRooflineModel:
+    def test_collective_bound_case(self):
+        r = roofline(
+            arch="x", shape="train", mesh="8x8",
+            hlo_flops=1e12, hlo_bytes=1e9, collective_bytes=1e13,
+            model_flops=1e12,
+        )
+        assert r.bottleneck == "collective"
+        assert r.step_time == pytest.approx(1e13 / TPU_V5E.ici_bw)
+
+    def test_step_time_is_max_of_terms(self):
+        r = roofline(
+            arch="x", shape="s", mesh="m",
+            hlo_flops=1e15, hlo_bytes=1e12, collective_bytes=1e11,
+            model_flops=1e15,
+        )
+        assert r.step_time == max(r.t_compute, r.t_memory, r.t_collective)
+        # all-useful FLOPs at the compute bound -> fraction is exactly 1
+        assert r.roofline_fraction == pytest.approx(1.0)
+
+    def test_custom_hardware_scales_terms(self):
+        hw = Hardware(name="half", peak_flops=TPU_V5E.peak_flops / 2,
+                      hbm_bw=TPU_V5E.hbm_bw, ici_bw=TPU_V5E.ici_bw)
+        base = roofline(arch="a", shape="s", mesh="m", hlo_flops=1e15,
+                        hlo_bytes=1e10, collective_bytes=1e9, model_flops=1e15)
+        slow = roofline(arch="a", shape="s", mesh="m", hlo_flops=1e15,
+                        hlo_bytes=1e10, collective_bytes=1e9, model_flops=1e15,
+                        hw=hw)
+        assert slow.t_compute == pytest.approx(2 * base.t_compute)
+
+    def test_zero_flops_degenerate(self):
+        r = RooflineResult(arch="a", shape="s", mesh="m", t_compute=0.0,
+                           t_memory=0.0, t_collective=0.0, model_flops=0.0,
+                           hlo_flops=0.0, hlo_bytes=0.0, collective_bytes=0.0)
+        assert r.flops_ratio == 0.0
+        assert r.roofline_fraction == 0.0
+
+    def test_row_carries_extras(self):
+        r = roofline(arch="a", shape="s", mesh="m", hlo_flops=1.0,
+                     hlo_bytes=1.0, collective_bytes=1.0, model_flops=1.0,
+                     extras={"temp_gb": 3.5})
+        row = r.row()
+        assert row["temp_gb"] == 3.5
+        assert row["bottleneck"] in ("compute", "memory", "collective")
+
+
+class TestFormatTable:
+    def test_empty(self):
+        assert format_table([]) == "(no rows)"
+
+    def test_markdown_shape(self):
+        rows = [roofline(arch="a", shape="s", mesh="m", hlo_flops=1e15,
+                         hlo_bytes=1e12, collective_bytes=1e11,
+                         model_flops=8e14).row()]
+        table = format_table(rows)
+        lines = table.splitlines()
+        assert lines[0].startswith("| arch | shape |")
+        assert lines[1].startswith("|---|")
+        assert len(lines) == 3
+        assert "compute" in lines[2]  # bottleneck column rendered
+
+
+class TestRooflineTableIntegration:
+    def test_rows_filters_and_sorts(self, tmp_path):
+        from benchmarks.roofline_table import rows
+
+        results = [
+            {"ok": True, "mesh": "16x16", "arch": "b", "shape": "s",
+             "memory": {"temp_bytes": 2e9},
+             "roofline": {"t_compute_s": 1.0, "t_memory_s": 2.0,
+                          "t_collective_s": 3.0, "bottleneck": "collective",
+                          "model_flops": 1.0, "hlo_flops": 2.0,
+                          "flops_ratio": 0.5, "roofline_fraction": 0.1}},
+            {"ok": True, "mesh": "16x16", "arch": "a", "shape": "s",
+             "memory": {"temp_bytes": None},
+             "roofline": {"t_compute_s": 1.0, "t_memory_s": 2.0,
+                          "t_collective_s": 3.0, "bottleneck": "memory",
+                          "model_flops": 1.0, "hlo_flops": 2.0,
+                          "flops_ratio": 0.5, "roofline_fraction": 0.1}},
+            {"ok": False, "mesh": "16x16", "arch": "c", "shape": "s"},
+            {"ok": True, "mesh": "8x8", "arch": "d", "shape": "s"},
+        ]
+        path = tmp_path / "dryrun.json"
+        path.write_text(json.dumps(results))
+        out = rows(path=str(path))
+        assert [r["arch"] for r in out] == ["a", "b"]  # sorted, filtered
+        assert out[0]["temp_gb"] == 0.0 and out[1]["temp_gb"] == 2.0
+
+    def test_smoke_mode_subprocess(self):
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.roofline_table", "--smoke"],
+            capture_output=True, text=True, timeout=120,
+            cwd=os.path.join(HERE, ".."),
+            env={**os.environ, "PYTHONPATH": os.path.join(HERE, "..", "src")},
+        )
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        assert "arch,shape,t_compute_s" in proc.stdout  # CSV header
+        assert "smoke,train" in proc.stdout  # synthetic cell
+        assert "| arch | shape |" in proc.stdout  # markdown table

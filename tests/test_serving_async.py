@@ -15,7 +15,7 @@ import threading
 import numpy as np
 import pytest
 
-from repro.api import SolverConfig, plan
+from repro.api import SolverConfig
 from repro.serving import AsyncSolveEngine, Overloaded, Ring, SolveEngine
 from repro.serving.queues import TenantQueues
 

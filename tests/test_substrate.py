@@ -1,6 +1,5 @@
 """Training/serving/data/checkpoint/runtime substrate tests."""
 
-import logging
 import os
 import subprocess
 import sys
