@@ -2,6 +2,13 @@
 
     PYTHONPATH=src python -m benchmarks.run [--skip-measured] [--smoke]
     PYTHONPATH=src python -m benchmarks.run --validate
+    PYTHONPATH=src python -m benchmarks.run --calibrate [--smoke]
+
+``--calibrate`` is the standalone cost-model refit: it re-runs the
+``benchmarks.autotune`` pipeline (primitive sweep -> affine fits -> in-loop
+alpha rescale -> collective alpha-beta fit), writes ``calibration.json`` at
+the repo root, and merges the fresh ``autotune`` section into the existing
+bench artifact without re-running the other sections.
 
 Prints ``name,us_per_call,derived``-style CSV blocks per section and writes
 a machine-readable ``BENCH_lu.json`` next to the repo root (per-strategy
@@ -24,10 +31,14 @@ end-to-end wall ratio), and the ``serving`` section (async-vs-sync serving
 throughput and batch-fill from ``benchmarks.serve_load``): the serving /
 batched ratios regress when they *drop* past tolerance.  ``--validate``
 checks the full-run JSON (``--validate --smoke`` the smoke one) against
-schema v8 — requiring the ``audit`` section (static comm-conformance rows
+schema v9 — requiring the ``audit`` section (static comm-conformance rows
 from ``repro.analysis.audit``: HLO-extracted vs model-predicted vs
 X-partitioning-lower-bound bytes per strategy x backend, zero
-error-severity findings, every row within the stated tolerance) — and
+error-severity findings, every row within the stated tolerance) and the
+``autotune`` section (``benchmarks.autotune``: the calibrated auto pick's
+measured wall vs the analytic comm-argmin pick's, floored at
+auto/analytic <= 1 + AUTOTUNE_TOLERANCE with a finite predicted-vs-measured
+residual on the auto row) — and
 including the acceptance floors that the ref B=128, N=32
 batched execute beats a Python loop of single executes by >= 3x, that the
 async serving tier beats the per-request sync baseline by >= 2x at
@@ -51,9 +62,10 @@ _ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 BENCH_JSON = os.path.join(_ROOT, "BENCH_lu.json")
 BENCH_SMOKE_JSON = os.path.join(_ROOT, "BENCH_lu.smoke.json")
 
+from benchmarks.autotune import AUTOTUNE_TOLERANCE
 from benchmarks.serve_load import SERVING_MIN_SPEEDUP
 
-SCHEMA = "BENCH_lu.v8"
+SCHEMA = "BENCH_lu.v9"
 _MEASURED_KEYS = {
     "strategy", "backend", "N", "grid", "wall_us_per_call", "reconstruction_err",
     "solve_err", "comm_per_proc_elements", "comm_per_proc_bytes",
@@ -88,6 +100,12 @@ _AUDIT_ROW_KEYS = {"strategy", "backend", "hotloop", "pivot", "compute_dtype",
                    "N", "grid", "extracted_bytes", "predicted_bytes",
                    "schedule_bytes", "lower_bound_bytes"}
 _AUDIT_STRATEGIES = ("conflux", "baseline2d", "cholesky25d")
+# Schema v9: the calibrated-autotuner demonstration rows (benchmarks.autotune)
+# — the measured wall of auto's calibrated pick vs the analytic comm-argmin
+# pick, with predicted-vs-measured residuals for both.
+_AUTOTUNE_ROW_KEYS = {"pick", "strategy", "backend", "hotloop", "v", "grid",
+                      "N", "predicted_wall_us", "measured_wall_us",
+                      "wall_residual"}
 # Full-run acceptance floors for the mixed_precision section: the refined
 # low-precision pipelines must land within this factor of the f64 direct
 # solve's residual (working-precision quality recovered by refinement) ...
@@ -287,6 +305,12 @@ def validate_bench(path: str = BENCH_JSON, mode: str = "full") -> list[str]:
                       "from repro.analysis.audit)")
     elif audit is not None:
         errors.extend(validate_audit(audit))
+    autotune = bench.get("autotune")
+    if measured and not autotune:
+        errors.append("missing section: autotune (calibrated-vs-analytic "
+                      "pick rows from benchmarks.autotune)")
+    elif autotune is not None:
+        errors.extend(validate_autotune(autotune))
     cache = bench.get("plan_cache")
     if not isinstance(cache, dict) or not _CACHE_KEYS <= set(cache):
         errors.append(f"plan_cache must carry {sorted(_CACHE_KEYS)}, got {cache}")
@@ -335,6 +359,65 @@ def validate_audit(audit) -> list[str]:
         errors.append(
             f"audit section reports {audit['errors']} error-severity "
             f"finding(s); the static audit must pass clean")
+    return errors
+
+
+def validate_autotune(autotune) -> list[str]:
+    """Schema check for the v9 `autotune` section: both the calibrated
+    ("auto") and analytic picks must be present with measured walls, the
+    auto pick must carry a prediction and a finite residual (the feedback
+    loop the calibrated path exists for), and auto's measured wall must sit
+    within AUTOTUNE_TOLERANCE of the analytic pick's — the acceptance
+    criterion that fitted constants rank at least as well as element counts.
+    """
+    import math
+
+    errors: list[str] = []
+    if not isinstance(autotune, dict):
+        return [f"autotune must be a dict section, got {type(autotune).__name__}"]
+    rows = autotune.get("rows")
+    if not isinstance(rows, list) or not rows:
+        return ["autotune.rows must be a non-empty list of records"]
+    picks = {}
+    for i, r in enumerate(rows):
+        missing = _AUTOTUNE_ROW_KEYS - set(r)
+        if missing:
+            errors.append(f"autotune.rows[{i}] missing keys: {sorted(missing)}")
+            continue
+        picks[r["pick"]] = r
+        if not (isinstance(r["measured_wall_us"], (int, float))
+                and r["measured_wall_us"] > 0):
+            errors.append(f"autotune.rows[{i}] ({r['pick']}): measured_wall_us "
+                          f"must be positive, got {r['measured_wall_us']!r}")
+    if not {"auto", "analytic"} <= set(picks):
+        errors.append(f"autotune.rows must carry both the 'auto' and "
+                      f"'analytic' picks, saw {sorted(picks)}")
+    auto = picks.get("auto")
+    if auto is not None:
+        pred, resid = auto.get("predicted_wall_us"), auto.get("wall_residual")
+        if not (isinstance(pred, (int, float)) and pred > 0):
+            errors.append(f"autotune auto pick must carry a positive "
+                          f"predicted_wall_us, got {pred!r}")
+        if not (isinstance(resid, (int, float)) and math.isfinite(resid)):
+            errors.append(f"autotune auto pick must carry a finite "
+                          f"wall_residual, got {resid!r}")
+    if not isinstance(autotune.get("calibration_version"), str):
+        errors.append(f"autotune.calibration_version must be a string, got "
+                      f"{autotune.get('calibration_version')!r}")
+    tol = autotune.get("tolerance")
+    if not isinstance(tol, (int, float)):
+        errors.append(f"autotune.tolerance must be a number, got {tol!r}")
+        tol = AUTOTUNE_TOLERANCE
+    ratio = autotune.get("auto_over_analytic")
+    if not isinstance(ratio, (int, float)):
+        errors.append(f"autotune.auto_over_analytic must be a number, "
+                      f"got {ratio!r}")
+    elif not ratio <= 1.0 + tol:
+        errors.append(
+            f"autotune: the calibrated auto pick's measured wall must be "
+            f"within {tol:.0%} of the analytic pick's, got ratio {ratio:.2f} "
+            f"(> {1 + tol:.2f})"
+        )
     return errors
 
 
@@ -499,6 +582,18 @@ def smoke_gate(bench: dict, baseline: dict | None,
                 f"ratio {d['refined_over_direct']:.2f} vs baseline "
                 f"{ref['refined_over_direct']:.2f} (> {tol:.1f}x tolerance)"
             )
+    # auto/analytic is once more a ratio of two interleaved same-process
+    # walls; it rising past tol x baseline means the calibrated pick lost
+    # ground to the analytic one — stale or mis-fitted constants.
+    afresh = (bench.get("autotune") or {}).get("auto_over_analytic")
+    abase = ((baseline or {}).get("autotune") or {}).get("auto_over_analytic")
+    if isinstance(afresh, (int, float)) and isinstance(abase, (int, float)):
+        compared += 1
+        if afresh > tol * abase:
+            regressions.append(
+                f"autotune: auto/analytic wall ratio {afresh:.2f} vs baseline "
+                f"{abase:.2f} (> {tol:.1f}x tolerance)"
+            )
     sregs, scompared = serving_gate(bench, baseline, tol)
     return regressions + sregs, compared + scompared
 
@@ -513,6 +608,23 @@ def main() -> None:
         if errors:
             sys.exit(1)
         print(f"# {path} conforms to {SCHEMA}")
+        return
+
+    if "--calibrate" in sys.argv:
+        # Standalone calibrate mode: refit calibration.json from fresh traces
+        # and merge the resulting autotune section into the existing bench
+        # artifact (CI runs this in bench-smoke and uploads calibration.json).
+        from benchmarks import autotune
+
+        section = autotune.main(smoke=smoke)["autotune"]
+        path = BENCH_SMOKE_JSON if smoke else BENCH_JSON
+        if os.path.exists(path):
+            with open(path) as f:
+                bench = json.load(f)
+            bench["autotune"] = section
+            with open(path, "w") as f:
+                json.dump(bench, f, indent=1, default=str)
+            print(f"# merged autotune section into {path}")
         return
 
     skip_measured = "--skip-measured" in sys.argv
@@ -567,6 +679,14 @@ def main() -> None:
         print(f"# audit: {len(bench['audit']['rows'])} rows, "
               f"{bench['audit']['errors']} error(s) in "
               f"{time.perf_counter()-t0:.1f}s")
+
+        # Calibrated autotuner demonstration (schema v9): fit the cost model
+        # from fresh traces, then race auto's calibrated pick against the
+        # analytic comm-argmin pick, interleaved in one process.
+        _section("Autotune: calibrated auto pick vs analytic pick (v9)")
+        from benchmarks import autotune
+
+        bench["autotune"] = autotune.main(smoke=smoke)["autotune"]
 
     if not smoke:
         _section("Roofline table (from dry-run results, single pod)")

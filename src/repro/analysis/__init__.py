@@ -1,6 +1,21 @@
-"""Compiled-artifact analysis: HLO collective/FLOP accounting and rooflines."""
+"""Compiled-artifact analysis: HLO collective/FLOP accounting, rooflines,
+and the trace-calibrated cost model behind `strategy="auto"`."""
 
+from repro.analysis.costmodel import (
+    Calibration,
+    PrimitiveFit,
+    autotune_choice,
+    fit_calibration,
+    load_calibration,
+    predict_wall,
+    reset_calibration,
+    set_calibration,
+)
 from repro.analysis.hlo import analyze_hlo, HloReport
 from repro.analysis.roofline import roofline, RooflineResult, TPU_V5E
 
-__all__ = ["analyze_hlo", "HloReport", "roofline", "RooflineResult", "TPU_V5E"]
+__all__ = [
+    "analyze_hlo", "HloReport", "roofline", "RooflineResult", "TPU_V5E",
+    "Calibration", "PrimitiveFit", "autotune_choice", "fit_calibration",
+    "load_calibration", "predict_wall", "reset_calibration", "set_calibration",
+]

@@ -89,6 +89,13 @@ class SolverConfig:
               factorizes a [B, N, N] stack in one traced program (sequential
               strategies only — the distributed schedules shard one large
               matrix and reject B).
+    calibration: version tag of the cost-model calibration that resolved
+              this config, stamped by the trace-calibrated `strategy="auto"`
+              path (see `repro.analysis.costmodel`).  Callers leave it None;
+              it enters the cache key so plans chosen under one calibration
+              never alias plans chosen under another (re-fitting on new
+              hardware invalidates stale auto picks instead of silently
+              reusing them).
     """
 
     strategy: str = "auto"
@@ -102,6 +109,7 @@ class SolverConfig:
     hotloop: str = "windowed"
     B: int | None = None
     compute_dtype: str | None = None
+    calibration: str | None = None
 
     def __post_init__(self):
         dt = np.dtype(self.dtype)
@@ -157,6 +165,11 @@ class SolverConfig:
             raise ValueError(
                 f"B must be a positive int batch size or None, got {self.B!r}"
             )
+        if self.calibration is not None and not isinstance(self.calibration, str):
+            raise ValueError(
+                f"calibration must be a version string or None, got "
+                f"{self.calibration!r}"
+            )
 
     def with_(self, **changes) -> "SolverConfig":
         """Functional update (dataclasses.replace with validation rerun)."""
@@ -176,6 +189,9 @@ class SolverConfig:
         the key, so `plan((B, N))` and `plan(N)` never collide, and
         compute_dtype is part of the key, so a low-precision plan never
         collides with the full-precision plan of the same working dtype.
+        The calibration version participates so an auto pick made under one
+        fitted cost table never serves a process running under another.
         """
         return (N, self.dtype, self.strategy, self.pivot, self.grid, self.v,
-                self.backend, self.hotloop, self.B, self.compute_dtype)
+                self.backend, self.hotloop, self.B, self.compute_dtype,
+                self.calibration)

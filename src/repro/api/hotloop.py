@@ -36,22 +36,49 @@ import numpy as np
 from repro.core.windows import window_buckets
 
 
-def _best_of(fn, *args, repeats: int = 3) -> float:
-    """Best-of-N wall time of `fn(*args)` in microseconds (post-warmup)."""
-    jax.block_until_ready(fn(*args))  # compile/trace outside the timer
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
+def _time_once(fn, args) -> float:
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) * 1e6
+
+
+def _best_of_interleaved(entries: list[tuple[str, object, tuple]],
+                         repeats: int = 3) -> dict[str, dict]:
+    """Interleaved best-of-`repeats` over all primitives at once.
+
+    Sequential best-of-N times primitive 1's N repeats, then primitive 2's,
+    and so on — a container load spike during one primitive's slot skews
+    that primitive alone, silently distorting the *ratios* the cost-model
+    fitter consumes.  Interleaving rounds (the same load-robustness pattern
+    the bench smoke gate uses) spreads any spike across every primitive,
+    and the per-primitive relative spread (worst/best - 1) tells the fitter
+    how noisy each sample was so it can down-weight it.
+
+    entries: (name, jitted_fn, args); returns {name: {"best_us", "spread"}}.
+    """
+    for _, fn, args in entries:  # compile/trace outside every timer
         jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e6
+    samples: dict[str, list[float]] = {name: [] for name, _, _ in entries}
+    for _ in range(max(repeats, 1)):
+        for name, fn, args in entries:
+            samples[name].append(_time_once(fn, args))
+    out = {}
+    for name, ts in samples.items():
+        best = min(ts)
+        spread = (max(ts) / best - 1.0) if best > 0 else 0.0
+        out[name] = {"best_us": best, "spread": spread}
+    return out
 
 
 def profile_primitives(N: int, config, grid=None, repeats: int = 3) -> dict:
     """Wall-time the hot-loop primitives on the plan's local shapes.
 
     Returns microsecond floats keyed panel_us / trsm_us / schur_us /
-    gather_us / gather_dense_us / fused_us, plus the shapes profiled.
+    gather_us / gather_dense_us / fused_us, a `<name>_spread` relative
+    best-to-worst spread per primitive (the cost-model fitter's noise
+    weight), plus the shapes profiled.  Timing is best-of-`repeats`
+    *interleaved* across primitives so a transient load spike cannot skew
+    one primitive's ratio against the others.
     """
     from repro.kernels.backend import get_backend
 
@@ -117,22 +144,22 @@ def profile_primitives(N: int, config, grid=None, repeats: int = 3) -> dict:
         )
         unit = True
 
-    timings = {
-        "panel_us": _best_of(panel_fn, *panel_args, repeats=repeats),
-        "trsm_us": _best_of(trsm_fn, *trsm_args, repeats=repeats),
-        "schur_us": _best_of(
-            jax.jit(lambda a, l, u: bk.schur_update(a, l, u)), A, L10, R01,
-            repeats=repeats,
-        ),
-        "fused_us": _best_of(
-            jax.jit(lambda a, l00, r01, l10:
-                    bk.fused_trsm_schur(a, l00, r01, l10, unit=unit)),
-            A, tri, R01, L10, repeats=repeats,
-        ),
-        "gather_us": _best_of(gather_fn, *gather_args, repeats=repeats),
-        "gather_dense_us": _best_of(
-            jax.jit(lambda s, a: s @ a), S, Afull, repeats=repeats,
-        ),
-    }
+    entries = [
+        ("panel", panel_fn, panel_args),
+        ("trsm", trsm_fn, trsm_args),
+        ("schur",
+         jax.jit(lambda a, l, u: bk.schur_update(a, l, u)), (A, L10, R01)),
+        ("fused",
+         jax.jit(lambda a, l00, r01, l10:
+                 bk.fused_trsm_schur(a, l00, r01, l10, unit=unit)),
+         (A, tri, R01, L10)),
+        ("gather", gather_fn, gather_args),
+        ("gather_dense", jax.jit(lambda s, a: s @ a), (S, Afull)),
+    ]
+    measured = _best_of_interleaved(entries, repeats=repeats)
+    timings = {}
+    for name, m in measured.items():
+        timings[f"{name}_us"] = m["best_us"]
+        timings[f"{name}_spread"] = m["spread"]
     timings["shapes"] = {"R": R, "C": C, "v": v, "wr": wr, "wc": wc}
     return timings

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import os
 import threading
+import time
 import warnings
 from collections import OrderedDict
 
@@ -52,6 +53,9 @@ class FactorizationPlan:
         self.comm = dict(comm or {})
         self.kind = kind  # "lu" or "cholesky" — flows into the Factorization
         self.hotloop: dict = {}  # per-primitive timings; see profile_hotloop
+        # Trace-calibrated auto decision that produced this plan (tuple,
+        # predicted wall, calibration version) — None for explicit configs.
+        self.autotune: dict | None = None
         self.trace_count = 0
         self.execute_count = 0
         # Cached plans are shared across threads (SolveEngine callers, the
@@ -148,14 +152,27 @@ class FactorizationPlan:
         # A_ref keeps the working-precision matrix for refinement residuals.
         compute = self.config.compute_dtype
         A_lo = A if compute is None else A.astype(resolve_dtype(compute))
+        t0 = time.perf_counter()
         F, rows = self._run(A_lo)
+        wall_us = (time.perf_counter() - t0) * 1e6
         with self._count_lock:
             self.execute_count += 1
+        # Close the autotuner's feedback loop: stamp the measured wall next
+        # to the cost model's prediction so comm_report() shows the residual.
+        autotune = None
+        if self.autotune is not None:
+            autotune = {k: v for k, v in self.autotune.items() if k != "grid"}
+            autotune["grid"] = str(self.autotune.get("grid"))
+            autotune["measured_wall_us"] = wall_us
+            pred = self.autotune.get("predicted_wall_us")
+            if pred:
+                autotune["wall_residual"] = (wall_us - pred) / pred
         return Factorization(
             F=F, rows=rows, grid=self.grid, comm=dict(self.comm),
             strategy=self.config.strategy, backend=self.config.backend,
             kind=self.kind, hotloop=dict(self.hotloop),
             A_ref=A, work_dtype=np.dtype(self.config.dtype),
+            autotune=autotune,
         )
 
     def __repr__(self):
@@ -281,7 +298,8 @@ def plan(N: int | tuple[int, int], config: SolverConfig | None = None, *,
     resolved = resolve(N, config)
     builder = get_strategy(resolved.strategy)
     if mesh is not None:
-        return builder(N, resolved, mesh=mesh)
+        return _attach_autotune(builder(N, resolved, mesh=mesh),
+                                resolved.cache_key(N))
     key = resolved.cache_key(N)
     while True:
         with _LOCK:
@@ -289,7 +307,7 @@ def plan(N: int | tuple[int, int], config: SolverConfig | None = None, *,
             if cached is not None:
                 _STATS["hits"] += 1
                 _PLAN_CACHE.move_to_end(key)  # LRU touch
-                return cached
+                return _attach_autotune(cached, key)
             pending = _BUILDING.get(key)
             if pending is None:
                 # We own the build: others with the same key wait instead of
@@ -303,11 +321,22 @@ def plan(N: int | tuple[int, int], config: SolverConfig | None = None, *,
         with _LOCK:
             _PLAN_CACHE[key] = built
             _evict_lru_locked()
-        return built
+        return _attach_autotune(built, key)
     finally:
         with _LOCK:
             _BUILDING.pop(key, None)
         pending.set()
+
+
+def _attach_autotune(p: FactorizationPlan, key: tuple) -> FactorizationPlan:
+    """Copy the calibrated-auto decision (tuple + predicted wall) onto the
+    plan so execute() can report the measured-vs-predicted residual.  Plans
+    from explicit configs (calibration is None) never carry one."""
+    if p.autotune is None and p.config.calibration is not None:
+        from repro.analysis import costmodel
+
+        p.autotune = costmodel.get_decision(key)
+    return p
 
 
 def factor(A, config: SolverConfig | None = None, **overrides) -> Factorization:

@@ -217,6 +217,10 @@ class Factorization:
     # the working dtype the caller asked for (SolverConfig.dtype); None
     # (hand-built results) means "same as the factor dtype"
     work_dtype: np.dtype | None = None
+    # trace-calibrated auto decision + this execute's measured wall time
+    # (predicted_wall_us / measured_wall_us / wall_residual); None unless the
+    # plan came from the calibrated `strategy="auto"` path
+    autotune: dict | None = None
 
     @property
     def N(self) -> int:
@@ -443,4 +447,18 @@ class Factorization:
             for k, val in self.hotloop.items():
                 if isinstance(val, (int, float)):
                     lines.append(f"    {k:18s} {val:12,.1f}")
+        if self.autotune:
+            pred = self.autotune.get("predicted_wall_us")
+            meas = self.autotune.get("measured_wall_us")
+            resid = self.autotune.get("wall_residual")
+            lines.append(
+                f"  autotune ({self.autotune.get('source', '?')}, calibration "
+                f"{self.autotune.get('calibration_version', '?')}):"
+            )
+            if pred is not None and meas is not None:
+                lines.append(
+                    f"    predicted {pred:12,.1f} us   measured {meas:12,.1f} us"
+                    f"   residual {resid:+.1%}" if resid is not None else
+                    f"    predicted {pred:12,.1f} us   measured {meas:12,.1f} us"
+                )
         return "\n".join(lines)

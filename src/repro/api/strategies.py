@@ -338,8 +338,21 @@ build_cholesky25d.resolve = _resolve_cholesky25d
 
 
 # ---------------------------------------------------------------------------
-# auto — Processor Grid Optimization, sequential fallback on one device.
+# auto — trace-calibrated wall-time argmin (auto v2), with the analytic
+# Processor Grid Optimization comm-volume ranking as fallback.
 # ---------------------------------------------------------------------------
+
+
+def _resolve_auto_analytic(N: int, config: SolverConfig, n_dev: int) -> SolverConfig:
+    """The original auto ranking: comm-volume argmin grid on >1 device,
+    sequential otherwise.  Used when no calibration covers the combo."""
+    if n_dev > 1:
+        try:
+            grid = optimize_grid(N, config.P_target or n_dev, config.M, v=config.v)
+            return config.with_(strategy="conflux", grid=grid)
+        except ValueError:
+            pass  # no feasible distributed grid: fall through to sequential
+    return _resolve_sequential(N, config.with_(strategy="sequential", grid=None))
 
 
 def _resolve_auto(N: int, config: SolverConfig) -> SolverConfig:
@@ -361,13 +374,27 @@ def _resolve_auto(N: int, config: SolverConfig) -> SolverConfig:
                 f"auto choose, or use strategy='sequential'"
             )
         return config.with_(strategy="conflux")
-    if n_dev > 1:
-        try:
-            grid = optimize_grid(N, config.P_target or n_dev, config.M, v=config.v)
-            return config.with_(strategy="conflux", grid=grid)
-        except ValueError:
-            pass  # no feasible distributed grid: fall through to sequential
-    return _resolve_sequential(N, config.with_(strategy="sequential", grid=None))
+    # auto v2: score every candidate (strategy, grid, v, backend, hotloop)
+    # tuple with the trace-calibrated cost model and take the predicted
+    # wall-time argmin.  The chosen tuple is recorded (keyed by the resolved
+    # cache key) so plan() can attach it and execute() can report the
+    # measured-vs-predicted residual; the calibration version is stamped on
+    # the config so the pick never outlives the table that made it.
+    from repro.analysis import costmodel
+
+    choice = costmodel.autotune_choice(N, config, n_dev=n_dev)
+    if choice is not None:
+        resolved = config.with_(
+            strategy=choice["strategy"], grid=choice["grid"], v=choice["v"],
+            backend=choice["backend"], hotloop=choice["hotloop"],
+            calibration=choice["calibration_version"],
+        )
+        costmodel.record_decision(resolved.cache_key(N), choice)
+        return resolved
+    # No calibration covering this (backend, dtype, device kind): the
+    # analytic comm-volume ranking still gives the paper's near-optimal
+    # schedule, just without the wall-time constants.
+    return _resolve_auto_analytic(N, config, n_dev)
 
 
 @register_strategy("auto")

@@ -14,6 +14,7 @@ Constraints we add for the TPU/shard_map port:
 from __future__ import annotations
 
 import math
+import threading
 from dataclasses import dataclass
 
 
@@ -71,30 +72,18 @@ def _pow2_divisors_leq(n: int, cap: int):
         d *= 2
 
 
-def optimize_grid(
+def enumerate_grids(
     N: int, P: int, M: float, v: int | None = None, max_waste: float = 0.5,
-    volume=None,
-) -> GridConfig:
-    """Search [Px, Py, c] x v minimizing the instrumented per-proc volume.
+) -> list[GridConfig]:
+    """Every [Px, Py, c] x v satisfying the layout + memory constraints.
 
-    Mirrors the paper's Processor Grid Optimization: tries all power-of-two
-    grids with Px*Py*c <= P (allowing up to `max_waste` of P to idle, as the
-    paper disables nodes for difficult rank counts), block sizes v aligned to
-    the layout, and scores with the exact schedule counter.  The replication
-    factor is memory-bounded: the local matrix share N^2*c/P must fit in M,
-    i.e. c <= P*M/N^2.
-
-    volume: the schedule counter to score with, ``(N, grid) -> {"total": ...}``;
-    defaults to the COnfLUX LU counter.  The Cholesky resolve hook passes
-    `chol_comm_volume` so SPD grids minimize the symmetric schedule's volume
-    rather than LU's (which includes tournament traffic Cholesky never sends).
+    The feasibility rules are the search space of `optimize_grid` (power-of-
+    two axes, Px*Py*c within [(1-max_waste)*P, P], local share N^2*c/P_used
+    fitting in M, v*axis dividing N); callers that rank candidates by a
+    different objective — the trace-calibrated autotuner scores them with
+    `predict_wall` — enumerate here instead of re-deriving the constraints.
     """
-    if volume is None:
-        from repro.core.lu.conflux import lu_comm_volume  # local import: no cycle at module load
-
-        volume = lu_comm_volume
-
-    best: tuple[float, GridConfig] | None = None
+    out: list[GridConfig] = []
     c_max = max(min(int(P * M / N**2), P), 1)
     v_candidates = [v] if v else [8, 16, 32, 64, 128, 256]
     c = 1
@@ -118,10 +107,73 @@ def optimize_grid(
             for vv in v_candidates:
                 if N % (vv * Px) or N % (vv * Py) or vv * max(Px, Py) > N:
                     continue
-                cfg = GridConfig(Px=Px, Py=Py, c=c, v=vv, N=N)
-                cost = volume(N, cfg)["total"]
-                if best is None or cost < best[0]:
-                    best = (cost, cfg)
+                out.append(GridConfig(Px=Px, Py=Py, c=c, v=vv, N=N))
+    return out
+
+
+# optimize_grid memo: resolve() re-enters the search on every plan() call for
+# auto configs (the unresolved config's cache key can't know the grid), so an
+# auto workload re-ran the full pow-2 x v sweep per plan-cache *hit*.  The
+# search is pure in its arguments — memoize it.  Failures are cached too:
+# an infeasible (N, P, M, v) stays infeasible.
+_SEARCH_CACHE: dict[tuple, GridConfig | ValueError] = {}
+_SEARCH_STATS = {"searches": 0, "hits": 0}
+_SEARCH_LOCK = threading.Lock()
+
+
+def grid_search_stats() -> dict:
+    with _SEARCH_LOCK:
+        return dict(_SEARCH_STATS)
+
+
+def clear_grid_search_cache() -> None:
+    with _SEARCH_LOCK:
+        _SEARCH_CACHE.clear()
+        _SEARCH_STATS.update(searches=0, hits=0)
+
+
+def optimize_grid(
+    N: int, P: int, M: float, v: int | None = None, max_waste: float = 0.5,
+    volume=None,
+) -> GridConfig:
+    """Search [Px, Py, c] x v minimizing the instrumented per-proc volume.
+
+    Mirrors the paper's Processor Grid Optimization: tries all power-of-two
+    grids with Px*Py*c <= P (allowing up to `max_waste` of P to idle, as the
+    paper disables nodes for difficult rank counts), block sizes v aligned to
+    the layout, and scores with the exact schedule counter.  The replication
+    factor is memory-bounded: the local matrix share N^2*c/P must fit in M,
+    i.e. c <= P*M/N^2.
+
+    volume: the schedule counter to score with, ``(N, grid) -> {"total": ...}``;
+    defaults to the COnfLUX LU counter.  The Cholesky resolve hook passes
+    `chol_comm_volume` so SPD grids minimize the symmetric schedule's volume
+    rather than LU's (which includes tournament traffic Cholesky never sends).
+
+    Results are memoized per (N, P, M, v, max_waste, volume counter); see
+    `grid_search_stats` / `clear_grid_search_cache`.
+    """
+    if volume is None:
+        from repro.core.lu.conflux import lu_comm_volume  # local import: no cycle at module load
+
+        volume = lu_comm_volume
+
+    key = (N, P, M, v, max_waste,
+           f"{getattr(volume, '__module__', '?')}.{getattr(volume, '__qualname__', repr(volume))}")
+    with _SEARCH_LOCK:
+        cached = _SEARCH_CACHE.get(key)
+        if cached is not None:
+            _SEARCH_STATS["hits"] += 1
+            if isinstance(cached, ValueError):
+                raise cached
+            return cached
+        _SEARCH_STATS["searches"] += 1
+
+    best: tuple[float, GridConfig] | None = None
+    for cfg in enumerate_grids(N, P, M, v=v, max_waste=max_waste):
+        cost = volume(N, cfg)["total"]
+        if best is None or cost < best[0]:
+            best = (cost, cfg)
     if best is None:
         hint = (
             f" with fixed v={v} (no power-of-two grid satisfies N % (v*Px) == 0 "
@@ -129,5 +181,10 @@ def optimize_grid(
             if v
             else f" (the local share N^2*c/P must fit in M={M:g}; raise M or P)"
         )
-        raise ValueError(f"no feasible grid for N={N}, P={P}, M={M:g}{hint}")
+        err = ValueError(f"no feasible grid for N={N}, P={P}, M={M:g}{hint}")
+        with _SEARCH_LOCK:
+            _SEARCH_CACHE[key] = err
+        raise err
+    with _SEARCH_LOCK:
+        _SEARCH_CACHE[key] = best[1]
     return best[1]

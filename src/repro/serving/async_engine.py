@@ -1,10 +1,13 @@
 """AsyncSolveEngine — the async serving tier over the batched solve path.
 
 `submit(A, b, tenant=...)` validates eagerly, enqueues onto the tenant's
-bounded queue, and returns a `concurrent.futures.Future` immediately.  A
-background executor thread coalesces queued requests — weighted-fair across
-tenants — into the `SolveEngine` power-of-two batch slots and flushes on a
-**size-OR-deadline** trigger: as soon as `max_batch` requests are pending,
+bounded queue, and returns a `concurrent.futures.Future` immediately.
+`submit_rhs(b, tenant=...)` does the same for RHS-only solves against the
+engine's current factorization — the executor coalesces them into ONE
+stacked [N, k] triangular-solve dispatch per batch (the
+`SolveEngine.submit`/`flush` path).  A background executor thread coalesces
+queued requests — weighted-fair across tenants — into the `SolveEngine`
+power-of-two batch slots and flushes on a **size-OR-deadline** trigger: as soon as `max_batch` requests are pending,
 or once the oldest queued request has waited `max_delay_ms`.  That is the
 classic serving trade: deep batches amortize dispatch (the batched plan
 beats a Python loop ~7x at B=128, N=32), the deadline caps the latency a
@@ -41,12 +44,21 @@ from concurrent.futures import Future
 import jax
 import numpy as np
 
+from typing import NamedTuple
+
 from repro.api import plan
 from repro.serving.metrics import Ring
 from repro.serving.queues import Overloaded, Request, TenantQueues
 from repro.serving.solve_engine import SolveEngine
 
 OVERLOAD_POLICIES = ("shed", "spill")
+
+
+class _PreparedRHS(NamedTuple):
+    """A validated RHS-only request (solve against the engine's current
+    factorization) riding the same tenant queues as whole systems."""
+
+    b: np.ndarray
 
 
 class AsyncSolveEngine:
@@ -191,6 +203,33 @@ class AsyncSolveEngine:
         """
         prep = self._engine._prepare_system(  # eager validation
             A, b, refine_tol, max_refine_iters)
+        return self._enqueue(tenant, prep, self._spill)
+
+    def submit_rhs(self, b, tenant: str = "default") -> Future:
+        """Queue an RHS-only solve against the engine's current factorization.
+
+        The futures-tier twin of `SolveEngine.submit`/`flush`: the request
+        rides the same tenant queues, deadline trigger, and fair scheduler
+        as whole-system submits, and the executor coalesces every RHS-only
+        request in a drained batch into ONE stacked [N, k] triangular-solve
+        dispatch.  Validation (shape [N], real dtype, a factorization must
+        exist) happens eagerly in the caller's thread; overload applies the
+        engine's shed/spill policy, a spill solving inline against the same
+        factorization.
+        """
+        arr = self._engine._prepare_rhs(b)  # eager validation
+        with self._engine._lock:
+            has_fact = self._engine._last is not None
+        if not has_fact:
+            raise RuntimeError(
+                "no factorization yet; submit_rhs solves against the "
+                "engine's current factors — call engine.factor(A) first"
+            )
+        return self._enqueue(tenant, _PreparedRHS(arr), self._spill_rhs)
+
+    def _enqueue(self, tenant: str, prep, spill_fn) -> Future:
+        """Shared futures-tier enqueue: push onto the tenant queue, arm the
+        executor trigger, and apply the overload policy via `spill_fn`."""
         fut: Future = Future()
         now = self._clock()
         req = Request(tenant=tenant, prep=prep, future=fut, t_submit=now)
@@ -215,7 +254,7 @@ class AsyncSolveEngine:
                 if depth == 1 or depth >= self.max_batch:
                     self._cv.notify()
         if spill:
-            x = self._spill(prep)
+            x = spill_fn(prep)
             self._lat_ms.record((self._clock() - now) * 1e3)
             fut.set_result(x)
         return fut
@@ -233,6 +272,12 @@ class AsyncSolveEngine:
             return np.asarray(rs.x)[:prep.n]
         x = np.asarray(jax.block_until_ready(fact.solve(prep.b)))
         return x[:prep.n]
+
+    def _spill_rhs(self, prep: _PreparedRHS) -> np.ndarray:
+        """Overload escape hatch for RHS-only requests: solve synchronously
+        against the engine's current factorization (no batching, degraded
+        latency, but the answer still comes back)."""
+        return np.asarray(self._engine.resolve(prep.b))
 
     # -- executor ------------------------------------------------------------
 
@@ -281,35 +326,60 @@ class AsyncSolveEngine:
                 self._serve(batch)
 
     def _serve(self, batch: list[Request]) -> int:
-        """Flush one drained batch through the engine's batch slots and
-        complete the futures (results, or the solver's exception)."""
+        """Flush one drained batch through the engine and complete the
+        futures (results, or the solver's exception).
+
+        Mixed batches split onto the engine's two dispatch paths: whole
+        systems ride the batched factorize+solve slots (`flush_systems`),
+        RHS-only requests ride the stacked [N, k] solve (`flush`).  Each
+        half fails independently — a broken factorization failing the RHS
+        half does not take down the systems half's futures.
+        """
         active = [r for r in batch if r.future.set_running_or_notify_cancel()]
         if not active:
             return 0
-        try:
-            tickets = [self._engine._enqueue_prepared(r.prep) for r in active]
-            xs = self._engine.flush_systems()
-        except Exception as exc:  # noqa: BLE001 — propagate to every future
-            # The batch is already drained and its futures are about to carry
-            # the exception; leaving the engine queue populated would only
-            # poison the *next* batch's tickets with zombie systems.
-            self._engine._abort_pending_systems()
+        systems = [r for r in active if not isinstance(r.prep, _PreparedRHS)]
+        rhs = [r for r in active if isinstance(r.prep, _PreparedRHS)]
+        served = self._serve_group(
+            systems, self._engine._enqueue_prepared,
+            self._engine.flush_systems, self._engine._abort_pending_systems,
+        )
+        served += self._serve_group(
+            rhs, lambda p: self._engine.submit(p.b),
+            self._engine.flush, self._engine._abort_pending_rhs,
+        )
+        if served:
             with self._cv:
-                self._failed += len(active)
-            for r in active:
+                self._flushes += 1
+            self._fills.record(served / self.max_batch)
+        return served
+
+    def _serve_group(self, group: list[Request], enqueue, flush, abort) -> int:
+        """Dispatch one homogeneous request group through (enqueue, flush)
+        and complete its futures; on failure, abort the engine-side queue
+        (the futures already carry the exception — leaving it populated
+        would only poison the next batch's tickets with zombie entries)."""
+        if not group:
+            return 0
+        try:
+            tickets = [enqueue(r.prep) for r in group]
+            xs = flush()
+        except Exception as exc:  # noqa: BLE001 — propagate to every future
+            abort()
+            with self._cv:
+                self._failed += len(group)
+            for r in group:
                 r.future.set_exception(exc)
             return 0
         done = self._clock()
-        for r, t in zip(active, tickets):
-            r.future.set_result(xs[t])
+        for r, t in zip(group, tickets):
+            r.future.set_result(np.asarray(xs[t]))
             self._lat_ms.record((done - r.t_submit) * 1e3)
         with self._cv:
-            for r in active:
+            for r in group:
                 self._queues.mark_served(r.tenant)
-            self._flushes += 1
-            self._served += len(active)
-        self._fills.record(len(active) / self.max_batch)
-        return len(active)
+            self._served += len(group)
+        return len(group)
 
     # -- observability -------------------------------------------------------
 

@@ -160,12 +160,12 @@ class SolveEngine:
         """[(A, b), ...] -> [x, ...] — a request batch on one plan."""
         return [np.asarray(self.solve(A, b)) for A, b in systems]
 
-    def submit(self, b) -> int:
-        """Queue a single-RHS solve against the current factorization.
+    def _prepare_rhs(self, b) -> np.ndarray:
+        """Validate a single RHS vector for the stacked-solve queue.
 
-        Returns the ticket index into the list `flush()` returns.  The RHS
-        is validated eagerly (shape [N]) so a malformed request fails at
-        submit time, not inside a batch holding other requests hostage.
+        Raises ValueError on malformed input (the eager-failure contract of
+        `submit`); returns the array so the async tier's tenant queues can
+        hold validated RHS-only requests without enqueueing them here yet.
         """
         b = np.asarray(b)
         if b.shape != (self.N,):
@@ -176,6 +176,16 @@ class SolveEngine:
                 f"submit takes a real RHS (factors are real); got dtype "
                 f"{b.dtype.name} — solve b.real and b.imag separately"
             )
+        return b
+
+    def submit(self, b) -> int:
+        """Queue a single-RHS solve against the current factorization.
+
+        Returns the ticket index into the list `flush()` returns.  The RHS
+        is validated eagerly (shape [N]) so a malformed request fails at
+        submit time, not inside a batch holding other requests hostage.
+        """
+        b = self._prepare_rhs(b)
         with self._lock:
             self._pending.append(b)
             return len(self._pending) - 1
@@ -453,6 +463,15 @@ class SolveEngine:
                 self._n_refine_nonconverged += nonconv
             self._cells_useful += sum(p.n * p.n for p in pending)
         return results
+
+    def _abort_pending_rhs(self) -> int:
+        """Drop the queued RHS vectors (async-tier flush-failure twin of
+        `_abort_pending_systems`: the futures already carry the exception).
+        Returns the number of dropped requests."""
+        with self._lock:
+            dropped = len(self._pending)
+            self._pending = []
+            return dropped
 
     def _abort_pending_systems(self) -> int:
         """Drop the queued systems (async tier: after a flush failure has

@@ -1,0 +1,280 @@
+"""Trace-calibrated cost model: fits, the versioned artifact, predict_wall,
+and the calibrated `strategy="auto"` path.
+
+The synthetic-calibration tests are the heart: a collective-latency-heavy
+table must steer auto away from the analytic comm-volume pick (the whole
+point of auto v2 — element counts cannot rank wall time), and a missing /
+foreign / uncovered table must degrade gracefully back to the analytic
+ranking.  Calibration state is process-global, so every test that touches
+it runs under the `restore_calibration` fixture.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.analysis import costmodel
+from repro.analysis.costmodel import Calibration, PrimitiveFit
+from repro.api import SolverConfig, plan, resolve
+from repro.api.strategies import _resolve_auto_analytic
+from repro.core.lu.grid import GridConfig, enumerate_grids, optimize_grid
+
+
+def _synthetic(collective=None, beta=1e-6, alpha=0.0, device_kind="cpu",
+               tag="syn", keys=(("ref", "float32"), ("pallas", "float32"))):
+    """A uniform synthetic table: every primitive costs alpha + beta*work."""
+    fits = {p: PrimitiveFit(alpha, beta) for p in costmodel.PRIMITIVES}
+    tables = {k: dict(fits) for k in keys}
+    version = costmodel.content_version(tables, collective, tag)
+    return Calibration(version=version, device_kind=device_kind,
+                       tables=tables, collective=collective)
+
+
+@pytest.fixture
+def restore_calibration():
+    """Snapshot/restore the process-global active calibration."""
+    prev = costmodel.set_calibration(None)
+    try:
+        yield
+    finally:
+        if prev is None:
+            costmodel.reset_calibration()
+        else:
+            costmodel.set_calibration(prev)
+
+
+class TestFitAffine:
+    def test_recovers_clean_affine(self):
+        truth = PrimitiveFit(5.0, 0.25)
+        pts = [(w, truth.predict(w), 0.0) for w in (10.0, 100.0, 1000.0)]
+        fit = costmodel.fit_affine(pts)
+        assert fit.alpha_us == pytest.approx(5.0)
+        assert fit.beta_us == pytest.approx(0.25)
+        assert fit.n_samples == 3
+
+    def test_single_sample_is_pure_rate(self):
+        fit = costmodel.fit_affine([(200.0, 50.0, 0.1)])
+        assert fit.alpha_us == 0.0
+        assert fit.beta_us == pytest.approx(0.25)
+
+    def test_negative_slope_clamps_to_constant(self):
+        # time shrinking with work is measurement noise, not physics
+        fit = costmodel.fit_affine([(10.0, 100.0, 0.0), (100.0, 10.0, 0.0)])
+        assert fit.beta_us == 0.0 and fit.alpha_us > 0.0
+
+    def test_spread_downweights_noisy_samples(self):
+        clean = [(10.0, 10.0, 0.0), (100.0, 100.0, 0.0)]
+        outlier = (50.0, 5000.0, 0.0)
+        noisy_trusted = costmodel.fit_affine(clean + [outlier]).predict(50.0)
+        outlier_flagged = (50.0, 5000.0, 50.0)  # huge best-of-k spread
+        noisy_flagged = costmodel.fit_affine(clean + [outlier_flagged]).predict(50.0)
+        # flagging the load spike pulls the prediction back toward t = work
+        assert abs(noisy_flagged - 50.0) < abs(noisy_trusted - 50.0)
+
+    def test_rejects_empty(self):
+        with pytest.raises(ValueError, match="at least one sample"):
+            costmodel.fit_affine([(0.0, 1.0, 0.0)])
+
+
+class TestArtifactRoundTrip:
+    def test_save_load_identical_predictions(self, tmp_path):
+        coll = PrimitiveFit(12.0, 3e-4, n_samples=3, spread=0.05)
+        samples = {
+            ("ref", "float32"): {
+                "panel": [(1e3, 50.0, 0.1), (1e4, 410.0, 0.0)],
+                "fused": [(1e4, 90.0, 0.2), (1e5, 800.0, 0.1)],
+                "gather": [(64.0, 30.0, 0.0), (512.0, 35.0, 0.0)],
+                "gather_dense": [(1e4, 60.0, 0.0), (1e5, 500.0, 0.0)],
+            },
+        }
+        calib = costmodel.fit_calibration(samples, "cpu", collective=coll,
+                                          tag="rt", meta={"note": "test"})
+        path = tmp_path / "calibration.json"
+        calib.save(str(path))
+        loaded = costmodel.load_calibration(str(path))
+        assert loaded is not None
+        assert loaded.version == calib.version
+        assert loaded.device_kind == "cpu"
+        assert loaded.meta == {"note": "test"}
+        cfg = SolverConfig(strategy="auto")
+        for v in (8, 16):
+            a = costmodel.predict_wall(64, cfg, v=v, backend="ref",
+                                       calibration=calib)
+            b = costmodel.predict_wall(64, cfg, v=v, backend="ref",
+                                       calibration=loaded)
+            assert a["wall_us"] == pytest.approx(b["wall_us"])
+            assert a["terms"] == pytest.approx(b["terms"])
+
+    def test_version_tracks_constants(self):
+        a = _synthetic(beta=1e-6, tag="t")
+        b = _synthetic(beta=2e-6, tag="t")
+        assert a.version != b.version
+        assert _synthetic(beta=1e-6, tag="t").version == a.version
+
+    def test_foreign_schema_rejected(self, tmp_path):
+        path = tmp_path / "calibration.json"
+        path.write_text('{"schema": "something.else.v1", "version": "x"}')
+        assert costmodel.load_calibration(str(path)) is None
+        with pytest.raises(ValueError, match="schema"):
+            Calibration.from_json({"schema": "something.else.v1"})
+
+    def test_missing_path_is_none(self, tmp_path):
+        assert costmodel.load_calibration(str(tmp_path / "nope.json")) is None
+
+
+class TestPredictWall:
+    def test_uncovered_backend_is_none(self):
+        calib = _synthetic(keys=(("ref", "float32"),))
+        cfg = SolverConfig(strategy="auto")
+        assert costmodel.predict_wall(
+            64, cfg, v=8, backend="pallas", calibration=calib) is None
+
+    def test_wrong_device_kind_is_none(self):
+        calib = _synthetic(device_kind="tpu")  # fitted elsewhere
+        cfg = SolverConfig(strategy="auto")
+        assert costmodel.predict_wall(
+            64, cfg, v=8, backend="ref", calibration=calib) is None
+
+    def test_windowed_cheaper_than_flat_on_grid(self):
+        # shrinking trailing windows do strictly less fused work, and a
+        # uniform table prices work monotonically
+        calib = _synthetic(beta=1e-3)
+        cfg = SolverConfig(strategy="auto")
+        g = GridConfig(Px=2, Py=4, c=1, v=8, N=64)
+        w = costmodel.predict_wall(64, cfg, grid=g, hotloop="windowed",
+                                   backend="ref", calibration=calib)
+        f = costmodel.predict_wall(64, cfg, grid=g, hotloop="flat",
+                                   backend="ref", calibration=calib)
+        assert w["wall_us"] < f["wall_us"]
+
+    def test_collective_term_prices_wire_traffic(self):
+        quiet = _synthetic(beta=1e-6)
+        loud = _synthetic(collective=PrimitiveFit(100.0, 1e-3), beta=1e-6)
+        cfg = SolverConfig(strategy="auto")
+        g = GridConfig(Px=2, Py=4, c=1, v=8, N=64)
+        base = costmodel.predict_wall(64, cfg, grid=g, backend="ref",
+                                      calibration=quiet)
+        wired = costmodel.predict_wall(64, cfg, grid=g, backend="ref",
+                                       calibration=loud)
+        assert "collective" not in base["terms"] or \
+            base["terms"].get("collective", 0.0) == 0.0
+        assert wired["terms"]["collective"] > 0.0
+        assert wired["wall_us"] > base["wall_us"]
+
+    def test_bucket_trips_cover_every_step(self):
+        for N, v in ((64, 8), (128, 16), (96, 32)):
+            for hotloop in ("windowed", "flat"):
+                trips = costmodel._bucket_trips(N, v, hotloop)
+                assert sum(t for _, t in trips) == N // v
+
+
+class TestSyntheticArgmin:
+    """The acceptance construction: the comm-volume-optimal grid must lose
+    to a wall-cheaper grid under a collective-latency-heavy table."""
+
+    N, P, M = 64, 8, 1e9
+
+    def test_comm_optimal_grid_is_wall_suboptimal(self):
+        analytic = optimize_grid(self.N, self.P, self.M)
+        # per-op latency dominates: the argmin is the grid issuing the
+        # fewest collectives (deep replication, wide panels), NOT the
+        # element-count winner the analytic ranking picks
+        calib = _synthetic(collective=PrimitiveFit(1000.0, 0.0), tag="coll")
+        cfg = SolverConfig(strategy="auto")
+        choice = costmodel.autotune_choice(self.N, cfg, n_dev=self.P,
+                                           calibration=calib)
+        assert choice is not None and choice["source"] == "calibrated"
+        g = choice["grid"]
+        assert (g.Px, g.Py, g.c, g.v) != (
+            analytic.Px, analytic.Py, analytic.c, analytic.v)
+        assert (g.Px, g.Py, g.c, g.v) == (1, 1, 8, 64)  # fewest collectives
+        on_analytic = costmodel.predict_wall(
+            self.N, cfg, grid=analytic, backend=choice["backend"],
+            hotloop=choice["hotloop"], calibration=calib)
+        assert choice["predicted_wall_us"] < on_analytic["wall_us"]
+
+    def test_choice_is_the_true_argmin(self):
+        calib = _synthetic(collective=PrimitiveFit(1000.0, 0.0), tag="coll")
+        cfg = SolverConfig(strategy="auto")
+        choice = costmodel.autotune_choice(self.N, cfg, n_dev=self.P,
+                                           calibration=calib)
+        walls = []
+        for g in enumerate_grids(self.N, self.P, self.M):
+            for hotloop in ("windowed", "flat"):
+                pred = costmodel.predict_wall(
+                    self.N, cfg, grid=g, backend=choice["backend"],
+                    hotloop=hotloop, calibration=calib)
+                walls.append(pred["wall_us"])
+        assert choice["predicted_wall_us"] == pytest.approx(min(walls))
+        assert choice["n_scored"] > 1
+
+    def test_compute_heavy_table_flips_the_pick(self):
+        calib = _synthetic(beta=1.0, tag="compute")  # zero collective cost
+        cfg = SolverConfig(strategy="auto")
+        choice = costmodel.autotune_choice(self.N, cfg, n_dev=self.P,
+                                           calibration=calib)
+        g = choice["grid"]
+        # compute-dominated: narrow panels minimize the fused-work integral
+        assert g.v == 8
+        assert (g.Px, g.Py, g.c, g.v) != (1, 1, 8, 64)
+
+
+class TestCalibratedResolve:
+    def test_cache_key_isolated_across_versions(self, restore_calibration):
+        a = _synthetic(beta=1e-6, tag="a")
+        b = _synthetic(beta=9e-6, tag="b")
+        assert (SolverConfig(calibration=a.version).cache_key(48)
+                != SolverConfig(calibration=b.version).cache_key(48))
+        costmodel.set_calibration(a)
+        pa = plan(48, SolverConfig(strategy="auto"))
+        assert pa.config.calibration == a.version
+        costmodel.set_calibration(b)
+        pb = plan(48, SolverConfig(strategy="auto"))
+        assert pb.config.calibration == b.version
+        assert pa is not pb  # different table versions never share a plan
+        costmodel.set_calibration(a)
+        assert plan(48, SolverConfig(strategy="auto")) is pa  # cache hit
+
+    def test_decision_recorded_on_plan(self, restore_calibration):
+        costmodel.set_calibration(_synthetic(tag="rec"))
+        p = plan(48, SolverConfig(strategy="auto"))
+        assert p.autotune is not None
+        assert p.autotune["source"] == "calibrated"
+        assert p.autotune["predicted_wall_us"] > 0
+        assert p.autotune["calibration_version"] == p.config.calibration
+
+    def test_disabled_calibration_falls_back_to_analytic(
+            self, restore_calibration):
+        costmodel.set_calibration(None)
+        resolved = resolve(48, SolverConfig(strategy="auto"))
+        analytic = _resolve_auto_analytic(48, SolverConfig(strategy="auto"),
+                                          n_dev=1)
+        assert resolved.calibration is None
+        assert resolved.strategy == analytic.strategy
+        assert resolved.v == analytic.v
+
+    def test_foreign_device_table_falls_back(self, restore_calibration):
+        costmodel.set_calibration(_synthetic(device_kind="tpu"))
+        resolved = resolve(48, SolverConfig(strategy="auto"))
+        assert resolved.calibration is None  # tpu table never prices cpu runs
+
+    def test_uncovered_dtype_falls_back(self, restore_calibration):
+        costmodel.set_calibration(
+            _synthetic(keys=(("ref", "float64"),)))  # no float32 table
+        resolved = resolve(48, SolverConfig(strategy="auto"))
+        assert resolved.calibration is None
+
+    def test_execute_stamps_measured_wall(self, restore_calibration):
+        import numpy as np
+
+        costmodel.set_calibration(_synthetic(tag="stamp"))
+        p = plan(48, SolverConfig(strategy="auto"))
+        rng = np.random.default_rng(3)
+        A = rng.standard_normal((48, 48)).astype(np.float32) + 48 * np.eye(
+            48, dtype=np.float32)
+        fact = p.execute(A)
+        assert fact.autotune is not None
+        assert fact.autotune["measured_wall_us"] > 0
+        assert "wall_residual" in fact.autotune
+        report = fact.comm_report()
+        assert "autotune" in report and "predicted" in report

@@ -1,8 +1,16 @@
-"""optimize_grid edge cases: infeasibility, processor idling, fixed-v."""
+"""optimize_grid edge cases: infeasibility, processor idling, fixed-v,
+and the search memo (auto resolves must not re-run the pow-2 x v sweep)."""
 
 import pytest
 
-from repro.core.lu.grid import GridConfig, optimize_grid, validate_layout
+from repro.core.lu.grid import (
+    GridConfig,
+    clear_grid_search_cache,
+    enumerate_grids,
+    grid_search_stats,
+    optimize_grid,
+    validate_layout,
+)
 
 
 class TestOptimizeGridEdges:
@@ -40,6 +48,48 @@ class TestOptimizeGridEdges:
         g = optimize_grid(N=512, P=16, M=1e9)
         validate_layout(512, g)  # must not raise
         assert g.N == 512 and g.P_used <= 16
+
+
+class TestSearchMemo:
+    """optimize_grid is re-entered by every auto resolve (the unresolved
+    config's cache key cannot know the grid), so repeat searches must be
+    memo hits, not fresh pow-2 x v sweeps."""
+
+    def test_repeat_searches_hit_cache(self):
+        clear_grid_search_cache()
+        g1 = optimize_grid(96, 8, 1e9)
+        s = grid_search_stats()
+        assert s == {"searches": 1, "hits": 0}
+        for _ in range(5):
+            assert optimize_grid(96, 8, 1e9) == g1
+        s = grid_search_stats()
+        assert s == {"searches": 1, "hits": 5}
+
+    def test_distinct_args_search_separately(self):
+        clear_grid_search_cache()
+        optimize_grid(96, 8, 1e9)
+        optimize_grid(96, 4, 1e9)  # different P
+        optimize_grid(96, 8, 1e9, v=8)  # different v
+        assert grid_search_stats()["searches"] == 3
+
+    def test_infeasible_result_cached_and_reraised(self):
+        clear_grid_search_cache()
+        for _ in range(2):
+            with pytest.raises(ValueError, match="no feasible grid"):
+                optimize_grid(N=1024, P=4, M=1000.0)
+        s = grid_search_stats()
+        assert s["searches"] == 1 and s["hits"] == 1
+
+    def test_memo_matches_fresh_search(self):
+        clear_grid_search_cache()
+        fresh = optimize_grid(256, 16, 1e9)
+        cached = optimize_grid(256, 16, 1e9)
+        assert cached == fresh and grid_search_stats()["hits"] == 1
+
+    def test_enumerate_grids_spans_the_search_space(self):
+        # the optimizer's pick is always among the enumerated candidates
+        g = optimize_grid(256, 16, 1e9)
+        assert g in enumerate_grids(256, 16, 1e9)
 
 
 class TestValidateLayout:

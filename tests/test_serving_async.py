@@ -106,6 +106,88 @@ class TestDeadlineTrigger:
             eng.submit(A, b)
 
 
+class TestSubmitRhs:
+    def test_rhs_batch_one_stacked_dispatch(self):
+        eng, clock = _fake_engine(max_batch=8, max_delay_ms=10.0)
+        A, _ = _sys(32)
+        eng.engine.factor(A)
+        reqs = [_sys(32)[1] for _ in range(3)]
+        futs = [eng.submit_rhs(b, tenant="svc") for b in reqs]
+        assert all(not f.done() for f in futs)
+        clock.t = 0.02
+        assert eng.pump() == 3
+        for b, f in zip(reqs, futs):
+            assert _residual(A, b, f.result()) < 5e-3
+        st = eng.stats()
+        # one stacked [N, 3] dispatch, not three single solves
+        assert st["batched_solves"] == 1 and st["batched_rhs"] == 3
+        assert st["async"]["served"] == 3
+
+    def test_mixed_batch_splits_onto_both_paths(self):
+        eng, _ = _fake_engine(max_batch=4, max_delay_ms=1e6)
+        A, _ = _sys(32)
+        eng.engine.factor(A)
+        b_rhs = _sys(32)[1]
+        As, bs = _sys(24)
+        f_rhs = eng.submit_rhs(b_rhs)
+        f_sys = eng.submit(As, bs)
+        assert eng.pump(force=True) == 2
+        assert _residual(A, b_rhs, f_rhs.result()) < 5e-3
+        assert _residual(As, bs, f_sys.result()) < 5e-3
+        st = eng.stats()
+        assert st["batched_rhs"] == 1 and st["batched_systems"] == 1
+
+    def test_eager_validation(self):
+        eng, _ = _fake_engine()
+        # no factorization yet: fails at submit time, not in the batch
+        with pytest.raises(RuntimeError, match="factorization"):
+            eng.submit_rhs(np.zeros(32, np.float32))
+        eng.engine.factor(_sys(32)[0])
+        with pytest.raises(ValueError, match="single \\[N\\] RHS"):
+            eng.submit_rhs(np.zeros(31, np.float32))
+        with pytest.raises(ValueError, match="real"):
+            eng.submit_rhs(np.zeros(32, np.complex64))
+        assert eng.stats()["async"]["pending"] == 0
+
+    def test_rhs_shed_and_spill(self):
+        A, _ = _sys(32)
+        eng, _ = _fake_engine(max_batch=64, max_queue=1, overload="shed")
+        eng.engine.factor(A)
+        eng.submit_rhs(_sys(32)[1], tenant="t")
+        with pytest.raises(Overloaded):
+            eng.submit_rhs(_sys(32)[1], tenant="t")
+        assert eng.stats()["async"]["tenants"]["t"]["shed"] == 1
+
+        eng, _ = _fake_engine(max_batch=64, max_queue=1, overload="spill")
+        eng.engine.factor(A)
+        b1, b2 = _sys(32)[1], _sys(32)[1]
+        f1 = eng.submit_rhs(b1, tenant="t")
+        f2 = eng.submit_rhs(b2, tenant="t")  # overflow: solved inline
+        assert f2.done() and not f1.done()
+        assert _residual(A, b2, f2.result()) < 5e-3
+        assert eng.pump(force=True) == 1
+        assert _residual(A, b1, f1.result()) < 5e-3
+        assert eng.stats()["async"]["tenants"]["t"]["spilled"] == 1
+
+    def test_rhs_failure_spares_system_half(self, monkeypatch):
+        eng, _ = _fake_engine(max_batch=8, max_delay_ms=1e6)
+        A, _ = _sys(32)
+        eng.engine.factor(A)
+        f_rhs = eng.submit_rhs(_sys(32)[1])
+        As, bs = _sys(24)
+        f_sys = eng.submit(As, bs)
+        monkeypatch.setattr(
+            eng.engine, "flush",
+            lambda: (_ for _ in ()).throw(FloatingPointError("boom")))
+        assert eng.pump(force=True) == 1  # the systems half still serves
+        assert _residual(As, bs, f_sys.result()) < 5e-3
+        with pytest.raises(FloatingPointError):
+            f_rhs.result()
+        st = eng.stats()
+        assert st["async"]["failed"] == 1
+        assert st["pending"] == 0  # failed RHS queue was aborted, not leaked
+
+
 class TestRaggedThroughAsync:
     def test_mixed_sizes_one_engine(self):
         eng, clock = _fake_engine(max_batch=8, max_delay_ms=1.0)
